@@ -1,0 +1,82 @@
+"""Paper Tables 3/4/5 analogue: multisplit throughput vs bucket count, for
+DMS / WMS / BMS vs the sort-based baselines (RB-sort, direct key sort), for
+key-only and key-value, plus Table 6's input-distribution sensitivity.
+
+Rates are Mkeys/s on THIS host (CPU — relative standings are the
+reproduction target; absolute GPU numbers are in the paper)."""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core.identifiers import delta_buckets
+from repro.core.multisplit import multisplit
+from repro.core.sort import direct_sort_multisplit, rb_sort_multisplit
+
+N = 1 << 18
+M_SWEEP = (2, 8, 32, 128, 256)
+
+
+def _keys(n=N, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randint(0, 2**30, n, dtype=np.uint32))
+
+
+def _binomial_keys(m, n=N, seed=0):
+    rng = np.random.RandomState(seed)
+    ids = rng.binomial(m - 1, 0.5, size=n).astype(np.uint32)
+    width = 2**30 // m
+    return jnp.asarray(ids * width + rng.randint(0, width, n).astype(np.uint32))
+
+
+def run(key_value=True):
+    keys = _keys()
+    vals = jnp.arange(N, dtype=jnp.int32)
+    kv = "kv" if key_value else "keys"
+
+    for m in M_SWEEP:
+        bf = delta_buckets(m, 2**30)
+        for method in ("dms", "wms", "bms"):
+            f = jax.jit(functools.partial(
+                multisplit, bucket_fn=bf, method=method))
+            args = (keys, vals) if key_value else (keys,)
+            fn = (lambda k, v: f(k, values=v)) if key_value else (lambda k: f(k))
+            t = bench(jax.jit(fn), *args)
+            row(f"multisplit/{kv}/m={m}/{method}", t, f"{N / t / 1e6:.1f} Mkeys/s")
+        # RB-sort baseline (paper §3.4)
+        if key_value:
+            rb = jax.jit(lambda k, v: rb_sort_multisplit(k, bf, v).keys)
+            t = bench(rb, keys, vals)
+        else:
+            rb = jax.jit(lambda k: rb_sort_multisplit(k, bf).keys)
+            t = bench(rb, keys)
+        row(f"multisplit/{kv}/m={m}/rb-sort", t, f"{N / t / 1e6:.1f} Mkeys/s")
+
+    # direct full sort (paper §3.3 / Table 3 reference)
+    if key_value:
+        t = bench(jax.jit(lambda k, v: direct_sort_multisplit(k, v)[0]), keys, vals)
+    else:
+        t = bench(jax.jit(lambda k: direct_sort_multisplit(k)[0]), keys)
+    row(f"multisplit/{kv}/full-radix-sort-baseline", t, f"{N / t / 1e6:.1f} Mkeys/s")
+
+
+def run_distributions():
+    """Table 6 analogue: uniform vs binomial key distribution, m=256."""
+    m = 256
+    bf = delta_buckets(m, 2**30)
+    f = jax.jit(lambda k: multisplit(k, bf, method="bms").keys)
+    for name, keys in (("uniform", _keys()), ("binomial", _binomial_keys(m))):
+        t = bench(f, keys)
+        row(f"multisplit/dist={name}/m=256/bms", t, f"{N / t / 1e6:.1f} Mkeys/s")
+
+
+def main():
+    run(key_value=False)
+    run(key_value=True)
+    run_distributions()
+
+
+if __name__ == "__main__":
+    main()

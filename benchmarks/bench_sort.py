@@ -1,0 +1,36 @@
+"""Paper Tables 7/8 analogue: multisplit-based radix sort vs radix size r,
+against the platform sort (jax.lax.sort standing in for CUB)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core.sort import radix_sort
+
+N = 1 << 18
+
+
+def main():
+    rng = np.random.RandomState(0)
+    keys = jnp.asarray(rng.randint(0, 2**32, N, dtype=np.uint32))
+    vals = jnp.arange(N, dtype=jnp.int32)
+
+    for r in (4, 5, 6, 7, 8):
+        f = jax.jit(lambda k, v, r=r: radix_sort(k, v, radix_bits=r)[0])
+        t = bench(f, keys, vals)
+        row(f"sort/kv/multisplit-sort/r={r}", t, f"{N / t / 1e6:.1f} Mpairs/s")
+
+    t = bench(jax.jit(lambda k, v: jax.lax.sort((k, v), num_keys=1)[0]), keys, vals)
+    row("sort/kv/platform-sort", t, f"{N / t / 1e6:.1f} Mpairs/s")
+
+    for r in (6, 8):
+        f = jax.jit(lambda k, r=r: radix_sort(k, radix_bits=r)[0])
+        t = bench(f, keys)
+        row(f"sort/keys/multisplit-sort/r={r}", t, f"{N / t / 1e6:.1f} Mkeys/s")
+    t = bench(jax.jit(jax.lax.sort), keys)
+    row("sort/keys/platform-sort", t, f"{N / t / 1e6:.1f} Mkeys/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Benchmark timing utilities."""
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, warmup=1, trials=3):
+    """Median wall time (s) of a jax function (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def row(name, seconds, derived=""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

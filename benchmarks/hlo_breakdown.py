@@ -1,0 +1,144 @@
+"""Per-op-kind byte/flop breakdown of a unit dry-run compile — the
+"profile" for hillclimbing (we reason from lowered IR, not wall time).
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown \
+        --arch dbrx-132b --shape train_4k [--layers 2]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.launch import steps as S
+from repro.launch.dryrun import _UNIT_OVERRIDES, parallel_config, train_config
+from repro.launch.hlo_analysis import _DEF_RE, _shape_bytes
+from repro.launch.input_specs import SHAPES, batch_specs, decode_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.parallel.sharding import param_count
+
+
+def compile_unit(arch, shape, n_pattern_mults=1, mesh_kind="single", cfg_overrides=None):
+    cfg = get_config(arch)
+    pattern, n_super, tail = M.block_pattern(cfg)
+    over = dict(_UNIT_OVERRIDES[shape], unroll_scans=True)
+    moe_over = None
+    if cfg_overrides:
+        moe_over = cfg_overrides.pop("moe_dispatch", None)
+        over.update(cfg_overrides)
+    cfg_u = dataclasses.replace(cfg, n_layers=n_pattern_mults * len(pattern), **over)
+    if moe_over:
+        cfg_u = dataclasses.replace(cfg_u, moe=dataclasses.replace(cfg_u.moe, dispatch=moe_over))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    decls = M.decl_model(get_config(arch))
+    pcfg = parallel_config(cfg, mesh, param_count(decls))
+    tc = train_config(param_count(decls))
+    kind = SHAPES[shape]["kind"]
+    decls_u = M.decl_model(cfg_u)
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            step = S.make_train_step(cfg_u, tc)
+            st_sh = S.state_shardings(decls_u, pcfg, mesh, tc)
+            st_abs = S.abstract_state(decls_u, tc)
+            batch_abs = batch_specs(cfg_u, shape, with_labels=True)
+            b_sh = S.batch_sharding(cfg_u, mesh, batch_abs)
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None), donate_argnums=(0,))
+            compiled = jitted.lower(st_abs, batch_abs).compile()
+        elif kind == "prefill":
+            step = S.make_prefill_step(cfg_u)
+            p_sh = S.state_shardings(decls_u, pcfg, mesh, tc).params
+            p_abs = S.abstract_state(decls_u, tc).params
+            batch_abs = batch_specs(cfg_u, shape, with_labels=False)
+            b_sh = S.batch_sharding(cfg_u, mesh, batch_abs)
+            compiled = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(p_abs, batch_abs).compile()
+        else:
+            step = S.make_decode_step(cfg_u)
+            p_sh = S.state_shardings(decls_u, pcfg, mesh, tc).params
+            p_abs = S.abstract_state(decls_u, tc).params
+            cache_abs, token_abs, pos_abs = decode_specs(cfg_u, shape)
+            c_sh = S.cache_shardings(cfg_u, mesh, SHAPES[shape]["batch"])
+            t_sh = S.batch_sharding(cfg_u, mesh, token_abs)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                             out_shardings=(None, c_sh), donate_argnums=(1,))
+            compiled = jitted.lower(p_abs, cache_abs, token_abs, pos_abs).compile()
+    return compiled, cfg_u
+
+
+def breakdown(hlo_text, top=25, skip_fusion_bodies=True):
+    """Sum result bytes by (op, dtype); list the top individual shapes.
+
+    Instructions inside %fused_computation bodies are references into their
+    fusion's operands, not separate buffers — skipping them approximates
+    real traffic (fusion call sites still count their inputs/outputs).
+    """
+    by_kind = defaultdict(lambda: [0, 0])
+    big = []
+    in_fusion = False
+    for line in hlo_text.splitlines():
+        if skip_fusion_bodies:
+            stripped = line.lstrip()
+            if stripped.startswith("%fused_") or stripped.startswith("%region_"):
+                in_fusion = True
+            elif line.startswith("}") or stripped == "}":
+                in_fusion = False
+                continue
+            elif stripped.startswith("ENTRY") or stripped.startswith("%while_body") \
+                    or stripped.startswith("%checkpoint") or stripped.startswith("%closed_call"):
+                in_fusion = False
+            if in_fusion:
+                continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(2), m.group(3)
+        b = _shape_bytes(shape_str)
+        by_kind[op][0] += 1
+        by_kind[op][1] += b
+        big.append((b, op, shape_str.strip()[:60], line.strip()[:200]))
+    return by_kind, sorted(big, reverse=True)[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=1, help="pattern multiples")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--dump", default=None, help="save optimized HLO text here")
+    ap.add_argument("--dispatch", default=None,
+                    choices=[None, "dense", "sort", "multisplit", "multisplit_ep"])
+    args = ap.parse_args()
+
+    over = {"moe_dispatch": args.dispatch} if args.dispatch else None
+    compiled, cfg_u = compile_unit(args.arch, args.shape, args.layers,
+                                   cfg_overrides=over)
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(compiled.as_text())
+    cost = compiled.cost_analysis()
+    print(f"# unit: {args.arch} x {args.shape}, n_layers={cfg_u.n_layers}")
+    print(f"# per-device flops={cost.get('flops', 0):.4g} "
+          f"bytes={cost.get('bytes accessed', 0):.4g}")
+    by_kind, big = breakdown(compiled.as_text(), args.top)
+    print("\n## result-bytes by op kind (count, GiB)")
+    for op, (cnt, b) in sorted(by_kind.items(), key=lambda kv: -kv[1][1])[:20]:
+        print(f"{op:28s} {cnt:6d}  {b / 2**30:10.3f} GiB")
+    print("\n## largest single results")
+    for b, op, shape, line in big:
+        meta = ""
+        if "op_name=" in line:
+            meta = line.split('op_name="', 1)[1].split('"', 1)[0][-70:]
+        print(f"{b / 2**30:10.3f} GiB  {op:20s} {shape}  {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json and emits the
+EXPERIMENTS.md §Roofline table (all three terms, dominant bottleneck,
+MODEL_FLOPS ratio, one-line recommendation per cell)."""
+
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+SUGGEST = {
+    "compute": "raise arithmetic efficiency: fewer remat recomputes, bf16 everywhere",
+    "memory": "cut materialized intermediates: fuse attention/dispatch (Pallas), "
+              "bf16 intermediates, smaller loss/attn chunks",
+    "collective": "re-shard to shrink cross-device traffic: 2D expert sharding, "
+                  "reduce-scatter grads, overlap collectives with compute",
+}
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def load(mesh="single"):
+    rows = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def table(mesh="single", out=sys.stdout):
+    rows = load(mesh)
+    print(f"\n### Roofline — {mesh}-pod mesh "
+          f"({'256' if mesh == 'single' else '512'} chips, TPU v5e constants)\n", file=out)
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS/HLO | note |", file=out)
+    print("|---|---|---|---|---|---|---|---|", file=out)
+    for r in rows:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"SKIP: {r['reason']} |", file=out)
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"ERROR: {r.get('error', '?')[:60]} |", file=out)
+            continue
+        if r.get("roofline") is None:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"compiled OK in {r['compile_s']}s (pod-axis shard proof; "
+                  f"terms are single-pod) |", file=out)
+            continue
+        t = r["roofline"]
+        uf = r.get("useful_fraction")
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{r['dominant']}** | {uf:.2f} | {SUGGEST[r['dominant']][:58]} |",
+            file=out,
+        )
+
+
+def main():
+    import argparse
+    import io
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="insert tables into EXPERIMENTS.md at the marker")
+    args = ap.parse_args()
+    if args.write:
+        buf = io.StringIO()
+        for mesh in ("single", "multi"):
+            table(mesh, out=buf)
+        exp = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+        marker = "<!-- ROOFLINE TABLES INSERTED BY benchmarks/roofline.py -->"
+        text = exp.read_text()
+        head, _, tail = text.partition(marker)
+        # drop any previously inserted tables (up to the next ## heading)
+        rest = tail.split("\n## ", 1)
+        tail_keep = ("\n## " + rest[1]) if len(rest) > 1 else ""
+        exp.write_text(head + marker + "\n" + buf.getvalue() + tail_keep)
+        print(f"wrote tables into {exp}")
+    else:
+        for mesh in ("single", "multi"):
+            table(mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-parameter MoE LM with multisplit
+dispatch for a few hundred steps (paper technique inside a real training
+loop: data pipeline -> supervisor -> checkpoints -> loss curve).
+
+    PYTHONPATH=src python examples/train_moe.py                # ~25M, quick
+    PYTHONPATH=src python examples/train_moe.py --hundred-m    # ~110M, longer
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig, TrainConfig
+from repro.data import DataPipeline
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.optim import adamw_init
+from repro.parallel.sharding import init_params, param_count
+from repro.runtime import Supervisor, TrainLoopConfig
+
+
+def make_cfg(hundred_m: bool) -> ModelConfig:
+    if hundred_m:
+        return ModelConfig(
+            name="moe-110m", family="moe", n_layers=8, d_model=512, n_heads=8,
+            n_kv=8, d_ff=1408, vocab=8192, dtype="float32",
+            moe=MoEConfig(num_experts=8, top_k=2, dispatch="multisplit",
+                          capacity_factor=1.5),
+            attn_chunk=256, loss_chunk=256,
+        )
+    return ModelConfig(
+        name="moe-25m", family="moe", n_layers=4, d_model=256, n_heads=4,
+        n_kv=4, d_ff=704, vocab=4096, dtype="float32",
+        moe=MoEConfig(num_experts=8, top_k=2, dispatch="multisplit",
+                      capacity_factor=1.5),
+        attn_chunk=256, loss_chunk=256,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_moe_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.hundred_m)
+    steps = args.steps or (300 if args.hundred_m else 120)
+    tc = TrainConfig(global_batch=args.batch, seq_len=args.seq, lr=1e-3,
+                     total_steps=steps, warmup_steps=20)
+
+    decls = M.decl_model(cfg)
+    print(f"[train_moe] {cfg.name}: {param_count(decls)/1e6:.1f}M params, "
+          f"{cfg.moe.num_experts} experts top-{cfg.moe.top_k}, "
+          f"dispatch={cfg.moe.dispatch}, {steps} steps")
+    params = init_params(decls, jax.random.PRNGKey(0))
+    state = S.TrainState(params=params, opt=adamw_init(params, tc))
+
+    pipe = DataPipeline(vocab=cfg.vocab, seq_len=tc.seq_len, batch_per_host=tc.global_batch)
+    train_step = jax.jit(S.make_train_step(cfg, tc), donate_argnums=(0,))
+    sup = Supervisor(
+        train_step,
+        lambda step: jax.tree.map(jnp.asarray, pipe.batch_at(step)),
+        TrainLoopConfig(total_steps=steps, checkpoint_every=max(steps // 3, 25),
+                        checkpoint_dir=args.ckpt_dir, log_every=10),
+    )
+    state = sup.run(state)
+
+    losses = [h["loss"] for h in sup.history]
+    drops = [h.get("moe_drop_fraction", 0.0) for h in sup.history]
+    print(f"[train_moe] loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(drop fraction last: {drops[-1]:.3f})")
+    assert losses[-1] < losses[0], "MoE LM failed to learn"
+    print("[train_moe] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Device-wide histogram built from the multisplit prescan (paper §7.3).
+
+The paper reuses the pre-scan stage (tile histograms) and sums across
+subproblems instead of scanning — on TPU the "atomic add into the global
+array" becomes a tree reduction over the per-tile histogram matrix (no
+atomics; DESIGN.md §2). ``histogram_even`` / ``histogram_range`` mirror
+CUB's HistogramEven / HistogramRange used as the paper's comparison.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import multisplit as ms
+from repro.core.identifiers import BucketIdentifier, even_buckets, range_buckets
+
+Array = jnp.ndarray
+
+HIST_TILE = 4096
+
+
+def histogram(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    *,
+    tile: int = HIST_TILE,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> Array:
+    """Global bucket counts: prescan tiles, then reduce (no global scan)."""
+    m = bucket_fn.num_buckets
+    ids = bucket_fn(keys)
+    n = ids.shape[0]
+    ids_p, n_pad = ms._pad_to_tiles(ids, tile, m - 1)
+    ids_tiled = ids_p.reshape(-1, tile)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        hist = kops.tile_histograms(ids_tiled, m, interpret=interpret)
+    else:
+        hist = ms.prescan(ids_tiled, m)
+    counts = hist.sum(axis=0).astype(jnp.int32)
+    return counts.at[m - 1].add(-n_pad)
+
+
+def histogram_even(
+    keys: Array, lo: float, hi: float, num_buckets: int, **kw
+) -> Array:
+    """Evenly spaced bins (paper §7.3 scenario 1)."""
+    return histogram(keys, even_buckets(lo, hi, num_buckets), **kw)
+
+
+def histogram_range(keys: Array, splitters: Array, **kw) -> Array:
+    """Arbitrary splitter bins via binary search (paper §7.3 scenario 2)."""
+    return histogram(keys, range_buckets(splitters), **kw)

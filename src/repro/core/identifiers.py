@@ -1,0 +1,90 @@
+"""Bucket identifiers (paper §3.1, §6 "Bucket identification").
+
+A bucket identifier is any jnp-traceable function ``keys -> bucket_ids``
+with ``0 <= bucket_id < m``.  The paper's three benchmark identifiers are
+provided (delta, identity, range/splitter), plus the radix identifier used
+to build the multisplit radix sort (§7.1) and a generic ``from_fn`` wrapper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketIdentifier:
+    """A named bucket identifier: ``fn(keys) -> int32 bucket ids in [0, m)``."""
+
+    fn: Callable[[Array], Array]
+    num_buckets: int
+    name: str = "custom"
+
+    def __call__(self, keys: Array) -> Array:
+        ids = self.fn(keys)
+        return ids.astype(jnp.int32)
+
+
+def delta_buckets(num_buckets: int, key_max: int = 2**30) -> BucketIdentifier:
+    """Equal-width buckets over the key domain: ``f(u) = u // delta`` (paper §6)."""
+    delta = max(1, key_max // num_buckets)
+
+    def fn(keys: Array) -> Array:
+        ids = keys.astype(jnp.uint32) // jnp.uint32(delta)
+        return jnp.minimum(ids, num_buckets - 1).astype(jnp.int32)
+
+    return BucketIdentifier(fn, num_buckets, name=f"delta{num_buckets}")
+
+
+def identity_buckets(num_buckets: int) -> BucketIdentifier:
+    """Keys are already bucket ids: ``f(u) = u`` (paper §7.1)."""
+    return BucketIdentifier(
+        lambda keys: keys.astype(jnp.int32), num_buckets, name=f"identity{num_buckets}"
+    )
+
+
+def radix_buckets(pass_idx: int, radix_bits: int) -> BucketIdentifier:
+    """``f_k(u) = (u >> k*r) & (2^r - 1)`` — one LSD radix-sort digit (paper §7.1)."""
+    shift = pass_idx * radix_bits
+    mask = (1 << radix_bits) - 1
+
+    def fn(keys: Array) -> Array:
+        u = keys.astype(jnp.uint32)
+        return ((u >> jnp.uint32(shift)) & jnp.uint32(mask)).astype(jnp.int32)
+
+    return BucketIdentifier(fn, 1 << radix_bits, name=f"radix[{shift}:{shift + radix_bits}]")
+
+
+def range_buckets(splitters: Array) -> BucketIdentifier:
+    """Arbitrary splitter buckets via binary search (paper §7.3 "Range Histogram").
+
+    ``m = len(splitters) + 1``; key u lands in bucket j s.t.
+    ``splitters[j-1] <= u < splitters[j]``.
+    """
+    splitters = jnp.asarray(splitters)
+    m = int(splitters.shape[0]) + 1
+
+    def fn(keys: Array) -> Array:
+        return jnp.searchsorted(splitters, keys, side="right").astype(jnp.int32)
+
+    return BucketIdentifier(fn, m, name=f"range{m}")
+
+
+def even_buckets(lo: float, hi: float, num_buckets: int) -> BucketIdentifier:
+    """Evenly spaced float buckets (paper §7.3 "Even Histogram")."""
+    width = (hi - lo) / num_buckets
+
+    def fn(keys: Array) -> Array:
+        ids = jnp.floor((keys - lo) / width).astype(jnp.int32)
+        return jnp.clip(ids, 0, num_buckets - 1)
+
+    return BucketIdentifier(fn, num_buckets, name=f"even{num_buckets}")
+
+
+def from_fn(fn: Callable[[Array], Array], num_buckets: int, name: str = "user") -> BucketIdentifier:
+    """Wrap an arbitrary user function (the paper's "prime vs composite" etc.)."""
+    return BucketIdentifier(fn, num_buckets, name=name)

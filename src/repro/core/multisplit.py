@@ -1,0 +1,251 @@
+"""The multisplit primitive (paper §3–§5), TPU-native.
+
+Structure follows the paper's parallel model exactly (§4.1):
+
+    {local prescan} -> {one global scan} -> {local postscan + scatter}
+
+* prescan:   per-tile bucket histograms -> the ``m x L`` matrix ``H``.
+* scan:      ONE exclusive prefix-sum over the row-vectorized ``H``
+             (bucket-major), giving ``G[b, l]`` = #elements in earlier
+             buckets anywhere + #elements of bucket ``b`` in earlier tiles.
+* postscan:  per-tile local offsets (stable rank within bucket inside the
+             tile), final position ``p(i) = G[b, tile] + local_offset``
+             (paper eq. (2)); optionally reorder the tile bucket-major
+             first (paper §4.7) so the global scatter writes contiguous
+             per-bucket runs.
+
+Hardware adaptation (see DESIGN.md §2): the warp-ballot direct solve is
+replaced by a one-hot matrix direct solve over a VMEM-resident tile — the
+same binary matrix ``H̄`` of paper §4.5, built with vector compares instead
+of ``__ballot`` and reduced/scanned with MXU/VPU ops instead of ``__popc``.
+
+Three variants map to the paper's three implementations:
+
+* ``method="dms"``  — no reorder (Direct Multisplit).
+* ``method="wms"``  — tile-local reorder, small tiles (Warp-level MS).
+* ``method="bms"``  — tile-local reorder, large tiles (Block-level MS).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.identifiers import BucketIdentifier
+
+Array = jnp.ndarray
+
+# Tile sizes: "warp" tiles vs "block" tiles. On TPU these are VMEM tile
+# heights; BMS tiles are N_warp x larger, exactly the paper's Table 1 sizing
+# knob (larger subproblem => narrower global scan matrix H).
+WMS_TILE = 1024
+BMS_TILE = 4096
+
+
+class MultisplitResult(NamedTuple):
+    keys: Array                    # permuted keys, bucket-major, stable
+    values: Optional[Array]        # permuted values (None for key-only)
+    bucket_starts: Array           # (m,) start index of each bucket
+    bucket_counts: Array           # (m,) histogram
+    permutation: Array             # (n,) dest position of input element i
+
+
+# ---------------------------------------------------------------------------
+# Direct solve on one tile (paper §4.5, adapted per DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def tile_histogram(bucket_ids: Array, num_buckets: int) -> Array:
+    """Histogram of one tile: column-sum of the one-hot matrix H̄ (m,)."""
+    one_hot = (bucket_ids[:, None] == jnp.arange(num_buckets)[None, :]).astype(jnp.int32)
+    return one_hot.sum(axis=0)
+
+
+def tile_local_offsets(bucket_ids: Array, num_buckets: int) -> Tuple[Array, Array]:
+    """Stable in-bucket rank of each element of one tile + tile histogram.
+
+    Exclusive column cumsum of H̄ picked out at each element's own bucket —
+    paper Alg. 3 without ballots.
+    """
+    one_hot = (bucket_ids[:, None] == jnp.arange(num_buckets)[None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=0)
+    local = incl[jnp.arange(bucket_ids.shape[0]), bucket_ids] - 1
+    return local.astype(jnp.int32), incl[-1]
+
+
+# ---------------------------------------------------------------------------
+# Reference oracle: paper eq. (1), single subproblem == whole input
+# ---------------------------------------------------------------------------
+
+def multisplit_ref(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values: Optional[Array] = None,
+) -> MultisplitResult:
+    """O(n·m) direct evaluation of eq. (1). Oracle for everything else."""
+    m = bucket_fn.num_buckets
+    ids = bucket_fn(keys)
+    local, hist = tile_local_offsets(ids, m)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)])
+    perm = starts[ids] + local
+    keys_out = jnp.zeros_like(keys).at[perm].set(keys)
+    values_out = None
+    if values is not None:
+        values_out = jnp.zeros_like(values).at[perm].set(values)
+    return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
+
+
+# ---------------------------------------------------------------------------
+# Tiled multisplit: {prescan, scan, postscan}
+# ---------------------------------------------------------------------------
+
+def _pad_to_tiles(x: Array, tile: int, fill) -> Tuple[Array, int]:
+    n = x.shape[0]
+    n_pad = (-n) % tile
+    if n_pad:
+        x = jnp.concatenate([x, jnp.full((n_pad,) + x.shape[1:], fill, x.dtype)])
+    return x, n_pad
+
+
+def prescan(ids_tiled: Array, num_buckets: int) -> Array:
+    """Local stage 1: per-tile histograms -> H with shape (L, m)."""
+    return jax.vmap(lambda t: tile_histogram(t, num_buckets))(ids_tiled)
+
+
+def global_scan(hist_per_tile: Array) -> Array:
+    """The ONE global operation: exclusive scan over row-vectorized H.
+
+    ``hist_per_tile`` is (L, m); the paper scans H (m, L) in bucket-major
+    (row-vectorized) order, so we scan the transpose, flattened.
+    Returns G with shape (L, m): global base for (tile l, bucket b).
+    """
+    h_t = hist_per_tile.T                                  # (m, L) bucket-major
+    flat = h_t.reshape(-1)
+    g = jnp.concatenate([jnp.zeros((1,), flat.dtype), jnp.cumsum(flat)[:-1]])
+    return g.reshape(h_t.shape).T                          # back to (L, m)
+
+
+def postscan_positions(ids_tiled: Array, g: Array, num_buckets: int) -> Array:
+    """Local stage 2: per-element final destination, eq. (2). (L, T) -> (L, T)."""
+
+    def one_tile(ids, g_tile):
+        local, _ = tile_local_offsets(ids, num_buckets)
+        return g_tile[ids] + local
+
+    return jax.vmap(one_tile)(ids_tiled, g)
+
+
+def multisplit(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    tile: Optional[int] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> MultisplitResult:
+    """Stable multisplit of ``keys`` (and optional ``values``) into buckets.
+
+    ``method``: "dms" (no tile reorder), "wms" (reorder, small tiles),
+    "bms" (reorder, large tiles). All three produce identical output
+    (paper §4.7: the reorder changes data movement, not the result); they
+    differ in the width L of the global scan and in scatter contiguity.
+
+    ``use_pallas`` routes the tile direct solve through the Pallas TPU
+    kernels in ``repro.kernels`` (interpret mode on CPU).
+    """
+    if method not in ("dms", "wms", "bms"):
+        raise ValueError(f"unknown multisplit method {method!r}")
+    if tile is None:
+        tile = WMS_TILE if method in ("dms", "wms") else BMS_TILE
+    m = bucket_fn.num_buckets
+    n = keys.shape[0]
+
+    ids = bucket_fn(keys)
+    # Pad the tail tile with bucket m-1 sentinels: they land at the very end
+    # of the output (stability keeps real m-1 keys ahead of pads? no — pads
+    # come AFTER all real elements of bucket m-1 only if appended last, which
+    # they are: tiles are processed in order and pads sit in the final tile's
+    # tail). We slice them off before returning.
+    ids_p, _ = _pad_to_tiles(ids, tile, m - 1)
+    n_total = ids_p.shape[0]
+    ids_tiled = ids_p.reshape(-1, tile)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        hist = kops.tile_histograms(ids_tiled, m, interpret=interpret)
+    else:
+        hist = prescan(ids_tiled, m)
+
+    g = global_scan(hist)
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        pos_tiled = kops.tile_positions(ids_tiled, g, m, interpret=interpret)
+    else:
+        pos_tiled = postscan_positions(ids_tiled, g, m)
+
+    perm_full = pos_tiled.reshape(-1)
+
+    if method in ("wms", "bms"):
+        # Tile-local reorder (paper §4.7): stable bucket-major sort *within*
+        # each tile before the global scatter. Final result identical; on
+        # TPU the scatter then moves per-bucket-contiguous runs (coalesced
+        # DMA / single-segment ragged all-to-all — DESIGN.md §2).
+        def reorder_tile(ids_t, keys_t, pos_t):
+            local, h = tile_local_offsets(ids_t, m)
+            starts = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(h)[:-1].astype(jnp.int32)]
+            )
+            tile_pos = starts[ids_t] + local
+            keys_r = jnp.zeros_like(keys_t).at[tile_pos].set(keys_t)
+            pos_r = jnp.zeros_like(pos_t).at[tile_pos].set(pos_t)
+            return keys_r, pos_r
+
+        keys_p, _ = _pad_to_tiles(keys, tile, 0)
+        keys_tiled = keys_p.reshape(-1, tile)
+        keys_r, pos_r = jax.vmap(reorder_tile)(ids_tiled, keys_tiled, pos_tiled)
+        scatter_src_keys = keys_r.reshape(-1)
+        scatter_pos = pos_r.reshape(-1)
+        if values is not None:
+            vals_p, _ = _pad_to_tiles(values, tile, 0)
+            vals_tiled = vals_p.reshape(-1, tile)
+
+            def reorder_vals(ids_t, vals_t):
+                local, h = tile_local_offsets(ids_t, m)
+                starts = jnp.concatenate(
+                    [jnp.zeros((1,), jnp.int32), jnp.cumsum(h)[:-1].astype(jnp.int32)]
+                )
+                tile_pos = starts[ids_t] + local
+                return jnp.zeros_like(vals_t).at[tile_pos].set(vals_t)
+
+            vals_r = jax.vmap(reorder_vals)(ids_tiled, vals_tiled)
+            scatter_src_vals = vals_r.reshape(-1)
+    else:
+        keys_p, _ = _pad_to_tiles(keys, tile, 0)
+        scatter_src_keys = keys_p
+        scatter_pos = perm_full
+        if values is not None:
+            vals_p, _ = _pad_to_tiles(values, tile, 0)
+            scatter_src_vals = vals_p
+
+    keys_out = jnp.zeros((n_total,), keys.dtype).at[scatter_pos].set(scatter_src_keys)[:n]
+    values_out = None
+    if values is not None:
+        values_out = (
+            jnp.zeros((n_total,) + values.shape[1:], values.dtype)
+            .at[scatter_pos]
+            .set(scatter_src_vals)[:n]
+        )
+
+    counts = hist.sum(axis=0).astype(jnp.int32)
+    # Remove padded sentinels from the last bucket's count.
+    counts = counts.at[m - 1].add(n - n_total)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    return MultisplitResult(keys_out, values_out, starts, counts, perm_full[:n])

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataPipeline, make_batch_iterator  # noqa: F401

@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention — the documented next lever of §Perf.
+
+The roofline analysis (EXPERIMENTS.md §Perf) shows that after the MoE
+dispatch fix, every remaining memory bound is dominated by materialized
+attention probability tensors (fp32/bf16 (C, C) blocks per pair per layer):
+XLA cannot fuse the full online-softmax chain at the graph level. This
+kernel keeps q·kᵀ, the softmax state and p·V entirely in VMEM: HBM traffic
+collapses to reading q/k/v once and writing o once (the flash-attention
+bound), removing the probability tensors from the roofline's memory term.
+
+Grid: one program per (batch·head, q-block). K/V live fully in VMEM per
+program (S·hd·2 B ≤ ~2 MB for the assigned shapes at S ≤ 8192; longer
+sequences tile K/V with an inner loop). Causal masking via block-local
+iota against absolute positions; the inner loop runs only over visible
+kv-blocks (dynamic fori bound — legal inside a kernel, and kernel-internal
+loops don't distort the graph-level cost analysis since the kernel is
+opaque to it).
+
+Validated bit-close against ``ref.flash_attention_ref`` in interpret mode
+(this container is CPU-only; TPU v5e is the compile target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  seq_len: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale                 # (block_q, hd)
+    hd = q.shape[-1]
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    n_kv = seq_len // block_k
+    # visible kv blocks for this q block (causal: up to and including qi's span)
+    hi = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k, n_kv) \
+        if causal else n_kv
+
+    def body(kj, carry):
+        acc, m, l = carry
+        k_blk = k_ref[0, pl.ds(kj * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(kj * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+        )                                                    # (block_q, block_k)
+        if causal:
+            k_pos = kj * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot(p, v_blk, precision=jax.lax.Precision.HIGHEST)
+        return acc * corr + pv, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: Array,                    # (BH, S, hd) — batch·heads folded
+    k: Array,                    # (BH, S, hd)
+    v: Array,                    # (BH, S, hd)
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> Array:
+    bh, s, hd = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / np.sqrt(hd)
+    grid = (bh, s // block_q)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_q=block_q, block_k=block_k, seq_len=s,
+            causal=causal, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,67 @@
+"""Fused device-wide histogram kernel (paper §7.3).
+
+The GPU version atomically adds per-block histograms into global memory; the
+TPU version exploits the *sequential* Pallas grid on a core: all tiles
+accumulate into ONE revisited output block held in VMEM — zero atomics, zero
+extra HBM round-trips (DESIGN.md §2). Bucket identification (even / range /
+radix digit) is fused into the kernel, mirroring the paper's fused bucket
+identifiers (§6 "Bucket identification").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.multisplit_tile import _one_hot, _pad_lanes
+
+Array = jnp.ndarray
+
+
+def _device_hist_kernel(ids_ref, hist_ref, *, m_pad: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[0, :] = jnp.zeros((m_pad,), jnp.int32)
+
+    one_hot = _one_hot(ids_ref[0, :], m_pad)
+    hist_ref[0, :] += one_hot.sum(axis=0).astype(jnp.int32)
+
+
+def device_histogram_pallas(ids_tiled: Array, num_buckets: int, *, interpret: bool = True) -> Array:
+    """(L, T) int32 ids -> (m,) global histogram, single revisited block."""
+    n_tiles, t = ids_tiled.shape
+    m_pad = _pad_lanes(num_buckets)
+    out = pl.pallas_call(
+        functools.partial(_device_hist_kernel, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (0, 0)),   # revisit: accumulate
+        out_shape=jax.ShapeDtypeStruct((1, m_pad), jnp.int32),
+        interpret=interpret,
+    )(ids_tiled)
+    return out[0, :num_buckets]
+
+
+def _even_ids_kernel(keys_ref, ids_ref, *, lo: float, inv_width: float, m: int):
+    x = keys_ref[0, :].astype(jnp.float32)
+    ids = jnp.floor((x - lo) * inv_width).astype(jnp.int32)
+    ids_ref[0, :] = jnp.clip(ids, 0, m - 1)
+
+
+def even_bucket_ids_pallas(
+    keys_tiled: Array, lo: float, hi: float, num_buckets: int, *, interpret: bool = True
+) -> Array:
+    """Fused even-bucket identification (f(u) = ⌊(u - lo)/Δ⌋), (L, T) -> (L, T)."""
+    n_tiles, t = keys_tiled.shape
+    inv_width = num_buckets / (hi - lo)
+    return pl.pallas_call(
+        functools.partial(_even_ids_kernel, lo=lo, inv_width=inv_width, m=num_buckets),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled)

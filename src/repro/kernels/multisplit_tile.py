@@ -1,0 +1,181 @@
+"""Pallas TPU kernels for the multisplit direct solve (paper §4.5, §5.5).
+
+One grid program processes one tile (the paper's subproblem): a VMEM-resident
+strip of bucket ids. The GPU ballot/popc machinery is replaced by a one-hot
+matrix in VMEM reduced/scanned with MXU-friendly dense ops (DESIGN.md §2):
+
+* histogram  = column-sum of the one-hot matrix H̄      (paper Alg. 2)
+* local rank = exclusive column-cumsum of H̄, read out
+               at each element's own bucket             (paper Alg. 3)
+* cumsum is computed as `tril @ H̄` — a lower-triangular ones matmul that
+  maps onto the MXU systolic array instead of a sequential scan.
+* reorder applies the within-tile permutation as TWO half-word one-hot
+  matmuls (keys split into 16-bit halves so fp32 accumulation is exact),
+  again MXU work instead of a serialized scatter (paper §4.7 reorder).
+
+All kernels use explicit BlockSpecs with VMEM tiling; the bucket axis is
+padded to a multiple of 128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _pad_lanes(m: int) -> int:
+    return max(128, ((m + 127) // 128) * 128)
+
+
+def _one_hot(ids: Array, m_pad: int) -> Array:
+    """(T,) int32 -> (T, m_pad) f32 one-hot via broadcasted iota (no gather)."""
+    t = ids.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, m_pad), 1)
+    return (cols == ids[:, None]).astype(jnp.float32)
+
+
+def _cumsum_mxu(x: Array) -> Array:
+    """Inclusive column cumsum as a lower-triangular matmul (MXU-native)."""
+    t = x.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    tril = (rows >= cols).astype(jnp.float32)
+    return jax.lax.dot(tril, x, precision=jax.lax.Precision.HIGHEST)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: per-tile histograms (the prescan direct solve)
+# ---------------------------------------------------------------------------
+
+def _histogram_kernel(ids_ref, hist_ref, *, m_pad: int):
+    ids = ids_ref[0, :]
+    one_hot = _one_hot(ids, m_pad)
+    hist_ref[0, :] = one_hot.sum(axis=0).astype(jnp.int32)
+
+
+def tile_histograms_pallas(ids_tiled: Array, num_buckets: int, *, interpret: bool = True) -> Array:
+    """(L, T) int32 ids -> (L, m) int32 histograms."""
+    n_tiles, t = ids_tiled.shape
+    m_pad = _pad_lanes(num_buckets)
+    out = pl.pallas_call(
+        functools.partial(_histogram_kernel, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+        interpret=interpret,
+    )(ids_tiled)
+    return out[:, :num_buckets]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: per-tile final positions (the postscan direct solve)
+# ---------------------------------------------------------------------------
+
+def _positions_kernel(ids_ref, g_ref, pos_ref, *, m_pad: int):
+    ids = ids_ref[0, :]
+    g = g_ref[0, :].astype(jnp.float32)
+    one_hot = _one_hot(ids, m_pad)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)          # rank within bucket
+    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    pos_ref[0, :] = (base + local).astype(jnp.int32)
+
+
+def tile_positions_pallas(
+    ids_tiled: Array, g: Array, num_buckets: int, *, interpret: bool = True
+) -> Array:
+    """(L, T) ids + (L, m) bases -> (L, T) destinations (paper eq. (2))."""
+    n_tiles, t = ids_tiled.shape
+    m_pad = _pad_lanes(num_buckets)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :num_buckets].set(g)
+    return pl.pallas_call(
+        functools.partial(_positions_kernel, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(ids_tiled, g_pad)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused tile reorder (WMS/BMS §4.7): local multisplit of the tile
+# ---------------------------------------------------------------------------
+
+def _reorder_kernel(ids_ref, keys_ref, vals_ref, keys_out_ref, vals_out_ref, dest_ref, *, m_pad: int):
+    ids = ids_ref[0, :]
+    t = ids.shape[0]
+    one_hot = _one_hot(ids, m_pad)                          # (T, m)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)            # (T,)
+    hist = incl[t - 1, :]                                   # (m,)
+    # exclusive scan of the tile histogram: starts[b] = sum_{b'<b} hist[b']
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
+    strict_tril = (rows > cols).astype(jnp.float32)
+    starts = jax.lax.dot(strict_tril, hist[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    base = jax.lax.dot(one_hot, starts[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    dest = (base + local).astype(jnp.int32)                 # within-tile destination
+    dest_ref[0, :] = dest
+
+    # Apply the permutation as a one-hot matmul; split 32-bit words into
+    # 16-bit halves so fp32 accumulation is exact.
+    rows_t = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    perm = (rows_t == dest[None, :]).astype(jnp.float32)    # perm[j, i] = (dest_i == j)
+
+    def permute32(x):
+        xi = x.astype(jnp.uint32)
+        halves = jnp.stack(
+            [(xi & jnp.uint32(0xFFFF)).astype(jnp.float32),
+             (xi >> jnp.uint32(16)).astype(jnp.float32)], axis=1
+        )                                                   # (T, 2)
+        moved = jax.lax.dot(perm, halves, precision=jax.lax.Precision.HIGHEST)
+        lo = moved[:, 0].astype(jnp.uint32)
+        hi = moved[:, 1].astype(jnp.uint32)
+        return (lo | (hi << jnp.uint32(16))).astype(x.dtype)
+
+    keys_out_ref[0, :] = permute32(keys_ref[0, :])
+    vals_out_ref[0, :] = permute32(vals_ref[0, :])
+
+
+def tile_reorder_pallas(
+    ids_tiled: Array,
+    keys_tiled: Array,
+    values_tiled: Array,
+    num_buckets: int,
+    *,
+    interpret: bool = True,
+):
+    """Stable within-tile bucket-major reorder of (keys, values) + dest map."""
+    n_tiles, t = ids_tiled.shape
+    m_pad = _pad_lanes(num_buckets)
+    keys_r, vals_r, dest = pl.pallas_call(
+        functools.partial(_reorder_kernel, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype),
+            jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype),
+            jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_tiled, keys_tiled, values_tiled)
+    return keys_r, vals_r, dest

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` executes kernel bodies in Python on CPU (this container);
+``interpret=False`` compiles for TPU (the deployment target). The wrappers
+are the only entry points the rest of the framework uses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import histogram_tile as _hist
+from repro.kernels import multisplit_tile as _mst
+from repro.kernels import radix_pass as _radix
+
+Array = jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def tile_histograms(ids_tiled: Array, num_buckets: int, interpret: bool = True) -> Array:
+    return _mst.tile_histograms_pallas(ids_tiled, num_buckets, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def tile_positions(ids_tiled: Array, g: Array, num_buckets: int, interpret: bool = True) -> Array:
+    return _mst.tile_positions_pallas(ids_tiled, g, num_buckets, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def tile_reorder(
+    ids_tiled: Array,
+    keys_tiled: Array,
+    values_tiled: Array,
+    num_buckets: int,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    return _mst.tile_reorder_pallas(
+        ids_tiled, keys_tiled, values_tiled, num_buckets, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def device_histogram(ids_tiled: Array, num_buckets: int, interpret: bool = True) -> Array:
+    return _hist.device_histogram_pallas(ids_tiled, num_buckets, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "num_buckets", "interpret"))
+def even_bucket_ids(
+    keys_tiled: Array, lo: float, hi: float, num_buckets: int, interpret: bool = True
+) -> Array:
+    return _hist.even_bucket_ids_pallas(keys_tiled, lo, hi, num_buckets, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "interpret"))
+def radix_tile_histograms(keys_tiled: Array, shift: int, bits: int, interpret: bool = True) -> Array:
+    return _radix.radix_tile_histograms_pallas(keys_tiled, shift, bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "interpret"))
+def radix_tile_positions(
+    keys_tiled: Array, g: Array, shift: int, bits: int, interpret: bool = True
+) -> Array:
+    return _radix.radix_tile_positions_pallas(keys_tiled, g, shift, bits, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal=True, block_q=256, block_k=256, interpret=True):
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )

@@ -1,0 +1,79 @@
+"""Fused radix-pass kernel: digit extraction + tile histogram + positions.
+
+One multisplit-sort pass (paper §7.1) needs the bucket identifier
+``f_k(u) = (u >> k·r) & (2^r − 1)`` evaluated twice (prescan + postscan).
+Fusing the shift/mask into the kernels avoids materializing the label vector
+in HBM — the exact overhead the paper's RB-sort baseline pays (§3.4) and its
+multisplit avoids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.multisplit_tile import _cumsum_mxu, _one_hot, _pad_lanes
+
+Array = jnp.ndarray
+
+
+def _digit(keys: Array, shift: int, bits: int) -> Array:
+    u = keys.astype(jnp.uint32)
+    return ((u >> jnp.uint32(shift)) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
+def _radix_hist_kernel(keys_ref, hist_ref, *, shift: int, bits: int, m_pad: int):
+    ids = _digit(keys_ref[0, :], shift, bits)
+    hist_ref[0, :] = _one_hot(ids, m_pad).sum(axis=0).astype(jnp.int32)
+
+
+def radix_tile_histograms_pallas(
+    keys_tiled: Array, shift: int, bits: int, *, interpret: bool = True
+) -> Array:
+    """(L, T) uint32 keys -> (L, 2^bits) per-tile digit histograms (fused)."""
+    n_tiles, t = keys_tiled.shape
+    m = 1 << bits
+    m_pad = _pad_lanes(m)
+    out = pl.pallas_call(
+        functools.partial(_radix_hist_kernel, shift=shift, bits=bits, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled)
+    return out[:, :m]
+
+
+def _radix_pos_kernel(keys_ref, g_ref, pos_ref, *, shift: int, bits: int, m_pad: int):
+    ids = _digit(keys_ref[0, :], shift, bits)
+    g = g_ref[0, :].astype(jnp.float32)
+    one_hot = _one_hot(ids, m_pad)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)
+    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    pos_ref[0, :] = (base + local).astype(jnp.int32)
+
+
+def radix_tile_positions_pallas(
+    keys_tiled: Array, g: Array, shift: int, bits: int, *, interpret: bool = True
+) -> Array:
+    """Fused postscan for one radix pass: (L, T) keys + (L, m) bases -> (L, T) dests."""
+    n_tiles, t = keys_tiled.shape
+    m = 1 << bits
+    m_pad = _pad_lanes(m)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
+    return pl.pallas_call(
+        functools.partial(_radix_pos_kernel, shift=shift, bits=bits, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled, g_pad)

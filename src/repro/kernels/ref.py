@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth; the kernels must match it
+bit-exactly (integer outputs) across the shape/dtype sweeps in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def tile_histograms(ids_tiled: Array, num_buckets: int) -> Array:
+    """(L, T) int32 bucket ids -> (L, m) int32 per-tile histograms."""
+    one_hot = ids_tiled[..., None] == jnp.arange(num_buckets)[None, None, :]
+    return one_hot.astype(jnp.int32).sum(axis=1)
+
+
+def tile_positions(ids_tiled: Array, g: Array, num_buckets: int) -> Array:
+    """(L, T) ids + (L, m) global bases -> (L, T) final destinations.
+
+    position = g[tile, id] + (stable rank of the element within its bucket
+    inside its tile)  — paper eq. (2) postscan.
+    """
+    one_hot = (ids_tiled[..., None] == jnp.arange(num_buckets)[None, None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=1)
+    local = (one_hot * (incl - 1)).sum(-1)
+    base = (one_hot * g[:, None, :]).sum(-1)
+    return (base + local).astype(jnp.int32)
+
+
+def tile_reorder(
+    ids_tiled: Array, keys_tiled: Array, values_tiled: Optional[Array], num_buckets: int
+) -> Tuple[Array, Optional[Array], Array]:
+    """Stable bucket-major reorder of each tile (paper §4.7).
+
+    Returns (keys_reordered, values_reordered, tile_offset) where
+    ``tile_offset[l, t]`` is the within-tile destination of element t.
+    """
+    m = num_buckets
+    one_hot = (ids_tiled[..., None] == jnp.arange(m)[None, None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=1)
+    local = (one_hot * (incl - 1)).sum(-1)
+    hist = incl[:, -1, :]
+    starts = jnp.cumsum(hist, axis=1) - hist
+    dest = (one_hot * starts[:, None, :]).sum(-1) + local
+
+    def scatter_row(dest_row, x_row):
+        return jnp.zeros_like(x_row).at[dest_row].set(x_row)
+
+    keys_r = jax.vmap(scatter_row)(dest, keys_tiled)
+    values_r = None
+    if values_tiled is not None:
+        values_r = jax.vmap(scatter_row)(dest, values_tiled)
+    return keys_r, values_r, dest.astype(jnp.int32)
+
+
+def device_histogram(ids_tiled: Array, num_buckets: int) -> Array:
+    """(L, T) ids -> (m,) global histogram (paper §7.3, atomic-free)."""
+    return tile_histograms(ids_tiled, num_buckets).sum(axis=0)
+
+
+def radix_tile_histograms(keys_tiled: Array, shift: int, bits: int) -> Array:
+    """Fused radix-digit extraction + per-tile histogram (paper §7.1)."""
+    ids = ((keys_tiled.astype(jnp.uint32) >> jnp.uint32(shift)) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+    return tile_histograms(ids, 1 << bits)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:
+    """Naive softmax attention oracle. q/k/v: (BH, S, hd)."""
+    import numpy as np
+
+    hd = q.shape[-1]
+    s = jnp.einsum("bid,bjd->bij", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bij,bjd->bid", p, v.astype(jnp.float32)).astype(q.dtype)

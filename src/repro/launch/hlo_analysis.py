@@ -1,0 +1,107 @@
+"""Post-SPMD HLO analysis: collective byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes accessed but not
+collective traffic, so we parse the optimized HLO text: build a table of
+instruction result shapes, then for each collective op sum its operands'
+sizes (the brief's definition of collective_bytes).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "all-reduce-start",
+    "all-gather-start", "collective-permute-start",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2,16,512]' or tuple '(f32[2], s32[4])' -> total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Returns {op_kind: {"count": int, "operand_bytes": int, "result_bytes": int}}."""
+    # pass 1: result shapes of all instructions
+    shapes: Dict[str, str] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1).lstrip("%"), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        defs.append((name, shape_str, op, line))
+
+    out: Dict[str, dict] = defaultdict(lambda: {"count": 0, "operand_bytes": 0, "result_bytes": 0})
+    for name, shape_str, op, line in defs:
+        kind = op.replace("-start", "")
+        if kind not in COLLECTIVES:
+            continue
+        # operands: %refs inside the parens
+        call = line.split(op + "(", 1)[1]
+        depth, args = 1, ""
+        for ch in call:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args += ch
+        operand_bytes = 0
+        for ref in re.findall(r"%?([\w.\-]+)", args):
+            if ref in shapes:
+                operand_bytes += _shape_bytes(shapes[ref])
+        rec = out[kind]
+        rec["count"] += 1
+        rec["operand_bytes"] += operand_bytes
+        rec["result_bytes"] += _shape_bytes(shape_str)
+    return dict(out)
+
+
+def roofline_terms(flops: float, bytes_accessed: float, collective_bytes: float, n_chips: int):
+    """The three roofline terms, in seconds (brief's formulas)."""
+    return {
+        "compute_s": flops / (n_chips * PEAK_FLOPS),
+        "memory_s": bytes_accessed / (n_chips * HBM_BW),
+        "collective_s": collective_bytes / (n_chips * ICI_BW),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(
+        (("compute", terms["compute_s"]), ("memory", terms["memory_s"]),
+         ("collective", terms["collective_s"])),
+        key=lambda kv: kv[1],
+    )[0]

@@ -1,0 +1,78 @@
+"""Abstract input stand-ins (ShapeDtypeStruct) for every (arch x shape) cell.
+
+The four assigned input shapes:
+
+    train_4k      seq=4,096    global_batch=256   -> train_step
+    prefill_32k   seq=32,768   global_batch=32    -> prefill_step
+    decode_32k    seq=32,768   global_batch=128   -> decode_step (KV cache of seq)
+    long_500k     seq=524,288  global_batch=1     -> decode_step, sub-quadratic archs only
+
+No device allocation anywhere — weak-type-correct ShapeDtypeStructs only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k only runs on sub-quadratic archs (DESIGN.md §6)."""
+    if shape == "long_500k":
+        return cfg.is_subquadratic()
+    return True
+
+
+def batch_specs(cfg: ModelConfig, shape: str, with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embed_frontend_stub:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.n_vis_tokens:
+        batch["vis_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_vis_tokens, cfg.d_model), dt)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: str):
+    """(cache, token_or_embed, position) abstract args for decode shapes."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    cache = M.cache_decl(cfg, b, max_len=s)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embed_frontend_stub:
+        token = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+    else:
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    position = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, position
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """The complete abstract argument tuple for the cell's step function
+    (excluding model/optimizer state, which comes from steps.abstract_state)."""
+    kind = SHAPES[shape]["kind"]
+    if kind == "train":
+        return (batch_specs(cfg, shape, with_labels=True),)
+    if kind == "prefill":
+        return (batch_specs(cfg, shape, with_labels=False),)
+    if kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape)

@@ -1,0 +1,89 @@
+"""Serving launcher: batched incremental decoding with a KV/state cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --batch 4 --prompt-len 32 --gen-len 32
+
+``--smoke`` runs the reduced config on the host devices. Prompts are
+consumed through the decode path (single-token steps), then generation
+continues greedily — one jitted ``decode_step``, shapes static throughout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.parallel.sharding import init_params, param_count
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).smoke() if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+    max_len = args.prompt_len + args.gen_len
+
+    decls = M.decl_model(cfg)
+    print(f"[serve] {cfg.name}: {param_count(decls)/1e6:.1f}M params")
+    params = init_params(decls, jax.random.PRNGKey(args.seed))
+
+    rng = np.random.RandomState(args.seed)
+    prompts = rng.randint(1, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
+
+    @jax.jit
+    def step(params, cache, tok, pos):
+        logits, cache = M.decode_step(params, cfg, cache, tok, pos)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    with jax.set_mesh(mesh):
+        vis = None
+        if cfg.n_vis_tokens:
+            vis = jnp.asarray(rng.randn(args.batch, cfg.n_vis_tokens, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+        cache = M.init_cache(params, cfg, args.batch, max_len=max_len, vis_embeds=vis)
+        tokens = jnp.asarray(prompts)
+        # prompt consumption (token-by-token through the decode path)
+        nxt = None
+        t0 = time.time()
+        for t in range(args.prompt_len):
+            if cfg.embed_frontend_stub:
+                emb = jax.random.normal(
+                    jax.random.PRNGKey(t), (args.batch, 1, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+                nxt, cache = step(params, cache, emb, jnp.asarray(t, jnp.int32))
+            else:
+                nxt, cache = step(params, cache, tokens[:, t:t + 1], jnp.asarray(t, jnp.int32))
+        generated = [np.asarray(nxt)]
+        for t in range(args.prompt_len, max_len - 1):
+            if cfg.embed_frontend_stub:
+                emb = params["embed"]  # audio stub has no token embedding table
+                raise SystemExit("generation loop for frontend-stub archs needs "
+                                 "external frame embeddings; serve supports "
+                                 "token archs")
+            nxt, cache = step(params, cache, generated[-1][:, None], jnp.asarray(t, jnp.int32))
+            generated.append(np.asarray(nxt))
+        dt = time.time() - t0
+        gen = np.stack(generated, axis=1)
+    n_steps = args.prompt_len + len(generated) - 1
+    print(f"[serve] {n_steps} decode steps, batch {args.batch}: "
+          f"{1000 * dt / n_steps:.1f} ms/step, {args.batch * n_steps / dt:.1f} tok/s")
+    print(f"[serve] sample continuation: {gen[0, :16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Jit-able step functions (train / prefill / decode) + their shardings.
+
+These are the exact graphs the dry-run lowers and the launchers execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import AdamWState, adamw_init, adamw_update, make_schedule
+from repro.parallel.sharding import decl_to_abstract, decl_to_sharding
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    sched = make_schedule(tc)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(M.loss_fn, has_aux=True)(params, cfg, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if tc.accum_steps <= 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            # gradient-accumulation microbatching: the global batch is split
+            # on the batch dim into accum_steps microbatches scanned
+            # sequentially — activation temps scale by 1/accum_steps while
+            # the optimizer math (and the dry-run's train semantics) are
+            # unchanged. This is the documented path that fits the >16 GiB
+            # train cells onto v5e HBM (EXPERIMENTS.md §Dry-run).
+            a = tc.accum_steps
+            micro = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch
+            )
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (loss, metrics), grads = grads_of(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+                return (g_acc, l_acc + loss, m_acc), None
+
+            zeros_like_f32 = lambda t: jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), t
+            )
+            g0 = zeros_like_f32(jax.eval_shape(lambda p: grads_of(p, jax.tree.map(
+                lambda x: x[0], micro))[1], state.params))
+            m0 = zeros_like_f32(jax.eval_shape(lambda p: grads_of(p, jax.tree.map(
+                lambda x: x[0], micro))[0][1], state.params))
+            (grads, loss, metrics), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(()), m0), micro
+            )
+            inv = 1.0 / a
+            grads = jax.tree.map(lambda g: (g * inv).astype(g.dtype), grads)
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+            loss = loss * inv
+        lr = sched(state.opt.step.astype(jnp.float32))
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params, tc, lr)
+        metrics = dict(metrics, **om)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-sequence forward, returning ONLY last-position logits (the
+    (B, S, V) tensor is never materialized — serving-realistic)."""
+
+    def prefill_step(params, batch):
+        hidden, _, _ = M._forward_trunk(params, cfg, batch)
+        from repro.models.layers import lm_head
+
+        last = hidden[:, -1:]
+        return lm_head(params["embed"], last, cfg)[:, 0]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token_or_embed, position):
+        return M.decode_step(params, cfg, cache, token_or_embed, position)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def state_shardings(decls, pcfg: ParallelConfig, mesh, tc: TrainConfig):
+    p_sh = decl_to_sharding(decls, pcfg, mesh)
+    rep = NamedSharding(mesh, P())
+    master = p_sh if jnp.dtype(tc.params_dtype) != jnp.float32 else None
+    return TrainState(
+        params=p_sh, opt=AdamWState(step=rep, mu=p_sh, nu=p_sh, master=master)
+    )
+
+
+def abstract_state(decls, tc: TrainConfig):
+    params = decl_to_abstract(decls)
+    pdt = jnp.dtype(tc.params_dtype)
+    params = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, pdt), params)
+    mdt = jnp.dtype(tc.moments_dtype)
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), params)
+    master = None
+    if pdt != jnp.float32:
+        master = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    return TrainState(
+        params=params,
+        opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=mom, nu=mom,
+                       master=master),
+    )
+
+
+def batch_sharding(cfg: ModelConfig, mesh, batch_tree):
+    """Batch dict -> shardings: batch dim over (pod, data); rest replicated.
+    Batch dims that don't divide the dp axes (long_500k's batch=1) replicate."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % n_dp == 0 and leaf.shape[0] >= n_dp:
+            return NamedSharding(mesh, P(*((dp_entry,) + (None,) * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def _block_cache_spec(kind: str, cfg: ModelConfig, batch_entry):
+    """PartitionSpecs for one block's decode cache. Self-attention caches are
+    TIME-sharded over the model axis (always divisible; decode attention
+    reduces over time with a psum — flash-decoding style)."""
+    b = batch_entry
+    if kind in ("attn", "attn_moe", "shared_attn"):
+        return {
+            "k": P(b, "model", None, None),
+            "v": P(b, "model", None, None),
+            "positions": P(None),
+            "pos": P(),
+        }
+    if kind == "cross":
+        return {"k": P(b, "model", None, None), "v": P(b, "model", None, None)}
+    if kind == "mamba":
+        return {"conv": P(b, None, "model"), "ssm": P(b, "model", None, None), "pos": P()}
+    if kind == "mlstm":
+        return {"c": P(b, None, "model", None), "n": P(b, None, "model"), "m": P(b, None), "pos": P()}
+    if kind == "slstm":
+        return {k: P(b, None, "model") for k in ("c", "n", "h", "m")} | {"pos": P()}
+    raise ValueError(kind)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int):
+    """Sharding tree parallel to model.cache_decl(cfg, batch, max_len)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    batch_entry = (dp if len(dp) > 1 else dp[0]) if batch % n_dp == 0 and batch >= n_dp else None
+
+    pattern, n_super, tail = M.block_pattern(cfg)
+
+    def stack_spec(spec_tree):
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    tree = {
+        "pattern": [stack_spec(_block_cache_spec(k, cfg, batch_entry)) for k in pattern],
+        "tail": [_block_cache_spec(k, cfg, batch_entry) for k in tail],
+    }
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )

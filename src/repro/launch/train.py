@@ -1,0 +1,107 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 128
+
+``--smoke`` uses the reduced config + a host-sized mesh (runs on this
+container); without it the production mesh/config is used (real pod). The
+loop always runs under the fault-tolerant Supervisor (checkpoint/restart,
+retry, straggler tracking).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.data import DataPipeline
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw_init
+from repro.parallel.sharding import decl_to_sharding, init_params, param_count
+from repro.runtime import Supervisor, TrainLoopConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default=None, choices=[None, "cosine", "wsd"])
+    ap.add_argument("--dispatch", default=None, choices=[None, "dense", "sort", "multisplit"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh()
+    if args.dispatch and cfg.moe.num_experts:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch))
+    schedule = args.schedule or ("wsd" if cfg.name.startswith("minicpm") else "cosine")
+    tc = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, lr=args.lr, schedule=schedule,
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 5), seed=args.seed,
+    )
+    pcfg = ParallelConfig(dp_axes=tuple(a for a in mesh.axis_names if a in ("pod", "data")))
+
+    decls = M.decl_model(cfg)
+    print(f"[train] {cfg.name}: {param_count(decls)/1e6:.1f}M params, mesh {dict(mesh.shape)}")
+    params = init_params(decls, jax.random.PRNGKey(tc.seed))
+    state = S.TrainState(params=params, opt=adamw_init(params, tc))
+
+    pipeline = DataPipeline(
+        vocab=cfg.vocab, seq_len=tc.seq_len, batch_per_host=tc.global_batch,
+        seed=tc.seed, frontend_stub_dim=cfg.d_model if cfg.embed_frontend_stub else None,
+    )
+
+    def batch_fn(step: int):
+        b = pipeline.batch_at(step)
+        if cfg.n_vis_tokens:
+            rng = np.random.RandomState(step)
+            b["vis_embeds"] = rng.randn(
+                tc.global_batch, cfg.n_vis_tokens, cfg.d_model
+            ).astype(np.float32)
+        return jax.tree.map(jnp.asarray, b)
+
+    train_step = S.make_train_step(cfg, tc)
+    with jax.set_mesh(mesh):
+        st_sh = S.state_shardings(decls, pcfg, mesh, tc)
+        jitted = jax.jit(
+            train_step, in_shardings=(st_sh, None), out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        sup = Supervisor(
+            jitted, batch_fn,
+            TrainLoopConfig(
+                total_steps=tc.total_steps, checkpoint_every=args.ckpt_every,
+                checkpoint_dir=args.ckpt_dir,
+            ),
+        )
+        state = sup.run(state)
+    print(f"[train] done; stats={sup.stats}")
+    if sup.history:
+        print(f"[train] first loss={sup.history[0]['loss']:.4f} "
+              f"last loss={sup.history[-1]['loss']:.4f}")
+    return sup
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,402 @@
+"""Core neural layers, pure functional JAX.
+
+Attention is implemented as a *triangular block scan*: a flash-style
+two-level chunking where, for causal masks, only the ~T²/2 visible
+(q-chunk, kv-chunk) block pairs are scheduled (statically), so compiled HLO
+FLOPs match useful work — this matters because the roofline analysis reads
+``compiled.cost_analysis()`` and a rectangular mask-based implementation
+would inflate the compute term ~2x at long sequence length.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ParamDecl, constrain, tp_size
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_decl(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDecl((d,), ("embed",), init="ones"),
+            "bias": ParamDecl((d,), ("embed",), init="zeros"),
+        }
+    return {"scale": ParamDecl((d,), ("embed",), init="ones")}
+
+
+def apply_norm(p, x: Array, cfg: ModelConfig) -> Array:
+    """Stats in fp32, elementwise math in the activation dtype.
+
+    Computing the whole normalization on an fp32 COPY of x materializes
+    activation-sized fp32 tensors per layer (measured: among the largest
+    buffers in the dry-run HLO); keeping only the (..., 1) statistics in
+    fp32 is the standard mixed-precision formulation.
+    """
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        var = jnp.mean(
+            jnp.square(x.astype(jnp.float32) - mu), axis=-1, keepdims=True
+        )
+        inv = jax.lax.rsqrt(var + 1e-5).astype(x.dtype)
+        return (x - mu.astype(x.dtype)) * inv * p["scale"].astype(x.dtype) \
+            + p["bias"].astype(x.dtype)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + 1e-6).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (with partial-rotary support for stablelm-2)
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: Array, positions: Array, theta: float, pct: float = 1.0) -> Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    rot = int(hd * pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                                # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: declarations
+# ---------------------------------------------------------------------------
+
+def attention_decl(cfg: ModelConfig, cross: bool = False):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd()
+    decl = {
+        "wq": ParamDecl((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDecl((d, k, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDecl((d, k, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDecl((h, hd, d), ("heads", None, "embed_fsdp")),
+        "norm": norm_decl(cfg),
+    }
+    if cross:
+        decl["norm_kv"] = norm_decl(cfg)
+    return decl
+
+
+# ---------------------------------------------------------------------------
+# Flash-style triangular block-scan attention
+# ---------------------------------------------------------------------------
+
+def _block_pairs(n_q: int, n_kv: int, causal: bool, window_chunks: Optional[int]):
+    """Static schedule of visible (q_chunk, kv_chunk) pairs."""
+    pairs = []
+    for qi in range(n_q):
+        for kj in range(n_kv):
+            if causal and kj > qi:
+                continue
+            if window_chunks is not None and kj < qi - window_chunks:
+                continue
+            pairs.append((qi, kj))
+    return np.array(pairs, dtype=np.int32)
+
+
+def multihead_attention(
+    q: Array,                    # (B, S, H, hd)
+    k: Array,                    # (B, T, K, hd)
+    v: Array,                    # (B, T, K, hd)
+    *,
+    causal: bool,
+    chunk: int = 1024,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    unroll: bool = False,
+    probs_bf16: bool = False,
+    pad_heads: bool = False,
+) -> Array:
+    """Chunked online-softmax attention with a triangular block schedule.
+
+    GQA: H must be a multiple of K. ``window`` enables sliding-window
+    masking (h2o-danube). Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    n_kv_heads = k.shape[2]
+    g = h // n_kv_heads
+    chunk = min(chunk, s, t)
+
+    # ---- explicit TP layout (Megatron-style; see parallel.sharding.constrain)
+    # Prefer sharding the kv-head dim; if the GQA kv count doesn't divide TP
+    # but the q-head count does, expand kv -> q heads (g=1) so heads shard
+    # cleanly; otherwise fall back to head_dim sharding (psum contractions).
+    # Without these anchors GSPMD sometimes replicates the batch dim of the
+    # 5-D score einsums (observed as "involuntary full rematerialization").
+    tp = tp_size()
+    h_orig = h
+    if tp > 1:
+        if n_kv_heads % tp != 0 and h % tp == 0 and g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+            n_kv_heads, g = h, 1
+        if pad_heads and n_kv_heads % tp != 0:
+            # §Perf iter 7: zero-pad heads to the next TP multiple. Padded
+            # heads attend uniformly over valid kv (scores 0), and their
+            # outputs are sliced away before the output projection — 1.33x
+            # head compute instead of TP-x replicated attention memory.
+            if g > 1:
+                k = jnp.repeat(k, g, axis=2)
+                v = jnp.repeat(v, g, axis=2)
+                n_kv_heads, g = h, 1
+            hp = -(-h // tp) * tp
+            padh = ((0, 0), (0, 0), (0, hp - h), (0, 0))
+            q, k, v = jnp.pad(q, padh), jnp.pad(k, padh), jnp.pad(v, padh)
+            h = n_kv_heads = hp
+        head_entry = "model" if n_kv_heads % tp == 0 else None
+        hd_entry = None if head_entry else "model"
+        q = constrain(q, "dp", None, head_entry if g == 1 else None, hd_entry)
+        k = constrain(k, "dp", None, head_entry, hd_entry)
+        v = constrain(v, "dp", None, head_entry, hd_entry)
+
+    s_pad = (-s) % chunk
+    t_pad = (-t) % chunk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    n_q, n_kv = qp.shape[1] // chunk, kp.shape[1] // chunk
+
+    window_chunks = None
+    if window is not None:
+        window_chunks = (window + chunk - 1) // chunk + 1
+    pairs = _block_pairs(n_q, n_kv, causal, window_chunks)
+
+    qp = qp.reshape(b, n_q, chunk, n_kv_heads, g, hd)
+    kp = kp.reshape(b, n_kv, chunk, n_kv_heads, hd)
+    vp = vp.reshape(b, n_kv, chunk, n_kv_heads, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    acc0 = jnp.zeros((b, n_q, chunk, n_kv_heads, g, hd), jnp.float32)
+    m0 = jnp.full((b, n_q, chunk, n_kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_q, chunk, n_kv_heads, g), jnp.float32)
+    if tp > 1:
+        acc0 = constrain(acc0, "dp", None, None, head_entry, None, None)
+        m0 = constrain(m0, "dp", None, None, head_entry, None)
+        l0 = constrain(l0, "dp", None, None, head_entry, None)
+
+    q_pos_all = q_offset + jnp.arange(n_q * chunk).reshape(n_q, chunk)
+    k_pos_all = jnp.arange(n_kv * chunk).reshape(n_kv, chunk)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qc = jax.lax.dynamic_index_in_dim(qp, qi, 1, keepdims=False)    # (B,C,K,G,hd)
+        kc = jax.lax.dynamic_index_in_dim(kp, kj, 1, keepdims=False)    # (B,C,K,hd)
+        vc = jax.lax.dynamic_index_in_dim(vp, kj, 1, keepdims=False)
+        qpos = jax.lax.dynamic_index_in_dim(q_pos_all, qi, 0, keepdims=False)  # (C,)
+        kpos = jax.lax.dynamic_index_in_dim(k_pos_all, kj, 0, keepdims=False)
+
+        scores = jnp.einsum("bikgd,bjkd->bkgij", qc, kc).astype(jnp.float32) * scale
+        mask = jnp.ones((chunk, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        mask &= (kpos < t)[None, :]                                    # kv padding
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+
+        mc = jnp.max(scores, axis=-1)                                   # (B,K,G,C)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False).transpose(0, 2, 3, 1)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False).transpose(0, 2, 3, 1)
+        acc_old = jax.lax.dynamic_index_in_dim(acc, qi, 1, keepdims=False).transpose(0, 2, 3, 1, 4)
+
+        m_new = jnp.maximum(m_old, mc)
+        p = jnp.exp(scores - m_new[..., None])                          # (B,K,G,C,C)
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_old * corr + p.sum(-1)
+        if probs_bf16:
+            pv = jnp.einsum("bkgij,bjkd->bkgid", p.astype(jnp.bfloat16), vc)
+            pv = pv.astype(jnp.float32)
+        else:
+            pv = jnp.einsum("bkgij,bjkd->bkgid", p, vc.astype(jnp.float32))
+        acc_new = acc_old * corr[..., None] + pv
+
+        acc = jax.lax.dynamic_update_index_in_dim(
+            acc, acc_new.transpose(0, 3, 1, 2, 4), qi, 1
+        )
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new.transpose(0, 3, 1, 2), qi, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new.transpose(0, 3, 1, 2), qi, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.asarray(pairs), unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, n_q * chunk, n_kv_heads * g, hd)[:, :s, :h_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,                    # (B, 1, H, hd)
+    k_cache: Array,              # (B, T, K, hd)  (already roped)
+    v_cache: Array,              # (B, T, K, hd)
+    kv_positions: Array,         # (T,) or (B, T) absolute positions, -1 = invalid
+    q_position: Array,           # scalar int32 — position of the new token
+    *,
+    window: Optional[int] = None,
+) -> Array:
+    """Single-token attention over a (ring-buffered) cache."""
+    b, _, h, hd = q.shape
+    n_kv_heads = k_cache.shape[2]
+    g = h // n_kv_heads
+    qg = q.reshape(b, 1, n_kv_heads, g, hd)
+    scores = jnp.einsum("bikgd,bjkd->bkgj", qg, k_cache).astype(jnp.float32)
+    scores /= np.sqrt(hd)
+    if kv_positions.ndim == 1:
+        kv_positions = kv_positions[None, :]
+    valid = (kv_positions >= 0) & (kv_positions <= q_position)
+    if window is not None:
+        valid &= q_position - kv_positions < window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention_block(
+    p,
+    x: Array,                    # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: Array,            # (S,) absolute positions of x
+    kv_src: Optional[Array] = None,   # cross-attention source (B, Skv, d)
+    cache: Optional[dict] = None,     # decode cache for this layer
+    window: Optional[int] = None,
+    cross: bool = False,
+) -> Tuple[Array, Optional[dict]]:
+    """Pre-norm attention block: returns (residual delta, updated cache).
+
+    ``cross=True`` attends to ``kv_src`` (or, during decode, to the
+    precomputed K/V held in ``cache``) with no causal mask.
+    """
+    dtype = x.dtype
+    xn = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(dtype))
+    is_cross = cross
+    if is_cross and cache is not None:
+        k = v = None                      # K/V precomputed in the cache
+    else:
+        src = apply_norm(p["norm_kv"], kv_src, cfg) if is_cross else xn
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dtype))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dtype))
+
+    if not is_cross:
+        q = apply_rope(q, positions[None, :], cfg.rope_theta, cfg.rope_pct)
+        kv_pos = positions if cache is None else positions  # self-attn positions
+        k = apply_rope(k, kv_pos[None, :], cfg.rope_theta, cfg.rope_pct)
+
+    if cache is not None and not is_cross:
+        # decode: append to (ring) cache and attend over it
+        slot = cache["pos"] % cache["k"].shape[1] if window is not None else cache["pos"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        kv_positions = jax.lax.dynamic_update_slice_in_dim(
+            cache["positions"], positions.astype(jnp.int32), slot, 0
+        )
+        out = decode_attention(
+            q, k_cache, v_cache, kv_positions, positions[0], window=window
+        )
+        new_cache = {
+            "k": k_cache, "v": v_cache, "positions": kv_positions,
+            "pos": cache["pos"] + x.shape[1],
+        }
+    elif cache is not None and is_cross:
+        out = multihead_attention(q, cache["k"], cache["v"], causal=False,
+                                  chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                                  probs_bf16=cfg.attn_probs_bf16,
+                                  pad_heads=cfg.pad_attn_heads)
+        new_cache = cache
+    else:
+        out = multihead_attention(
+            q, k, v, causal=not is_cross, chunk=cfg.attn_chunk, window=window,
+            q_offset=0, unroll=cfg.unroll_scans, probs_bf16=cfg.attn_probs_bf16,
+            pad_heads=cfg.pad_attn_heads,
+        )
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_decl(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": norm_decl(cfg),
+        "w_gate": ParamDecl((d, f), ("embed", "ff")),
+        "w_up": ParamDecl((d, f), ("embed", "ff")),
+        "w_down": ParamDecl((f, d), ("ff", "embed_fsdp")),
+    }
+
+
+def mlp_block(p, x: Array, cfg: ModelConfig) -> Array:
+    dtype = x.dtype
+    xn = apply_norm(p["norm"], x, cfg)
+    gate = jnp.einsum("bsd,df->bsf", xn, p["w_gate"].astype(dtype))
+    up = jnp.einsum("bsd,df->bsf", xn, p["w_up"].astype(dtype))
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_decl(cfg: ModelConfig):
+    decl = {}
+    vp = cfg.padded_vocab()
+    if not cfg.embed_frontend_stub:
+        decl["tok"] = ParamDecl((vp, cfg.d_model), ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        decl["head"] = ParamDecl((cfg.d_model, vp), ("embed", "vocab"))
+    decl["norm_f"] = norm_decl(cfg)
+    return decl
+
+
+def embed_tokens(p, tokens: Array, cfg: ModelConfig) -> Array:
+    emb = p["tok"].astype(_dt(cfg))
+    return emb[tokens]
+
+
+def lm_head(p, x: Array, cfg: ModelConfig) -> Array:
+    """Final norm + projection to vocab. x: (B, S, d) -> (B, S, V_padded)."""
+    xn = apply_norm(p["norm_f"], x, cfg)
+    w = (p["tok"].T if cfg.tie_embeddings else p["head"]).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", xn, w)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    vp = cfg.padded_vocab()
+    if vp != cfg.vocab:
+        # mask padded vocab columns so they never win softmax/argmax
+        col = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+        logits = jnp.where(col[None, None, :] < cfg.vocab, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return logits
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)

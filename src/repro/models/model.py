@@ -1,0 +1,510 @@
+"""Model assembly: super-block patterns, scanned layer stacks, caches.
+
+Every assigned architecture is expressed as a repeating *super-block*
+pattern (list of block kinds) scanned ``n_super`` times, plus an optional
+unrolled tail — this keeps compiled HLO size O(pattern) instead of
+O(n_layers) and uniformly handles heterogeneous stacks:
+
+    dense           ["attn"]                        x n_layers
+    dbrx            ["attn_moe"]                    x 40
+    llama4-maverick ["attn", "attn_moe"]            x 24   (interleaved MoE)
+    zamba2          ["mamba"]*5 + ["shared_attn"]   x 6  + ["mamba"]*2
+    xlstm           ["mlstm", "slstm"]              x 12
+    llama3.2-vision ["attn"]*4 + ["cross"]          x 20
+
+zamba2's shared attention block reuses ONE parameter set at every
+occurrence (closed over by the scan body — weight sharing is free under
+scan). Modality frontends (EnCodec/ViT) are stubs per the brief:
+``embed_frontend_stub`` architectures take precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    attention_block,
+    attention_decl,
+    embed_decl,
+    embed_tokens,
+    lm_head,
+    mlp_block,
+    mlp_decl,
+    apply_norm,
+)
+from repro.parallel.sharding import ParamDecl, is_decl
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Patterns
+# ---------------------------------------------------------------------------
+
+def block_pattern(cfg: ModelConfig) -> Tuple[List[str], int, List[str]]:
+    """Returns (pattern, n_super, tail)."""
+    if cfg.family == "hybrid" and cfg.ssm.attn_every:
+        per = cfg.ssm.attn_every
+        pattern = ["mamba"] * (per - 1) + ["shared_attn" if cfg.ssm.shared_attn else "attn"]
+        n_super = cfg.n_layers // per
+        tail = ["mamba"] * (cfg.n_layers - n_super * per)
+        return pattern, n_super, tail
+    if cfg.family == "ssm" and cfg.slstm_every:
+        per = cfg.slstm_every
+        pattern = ["mlstm"] * (per - 1) + ["slstm"]
+        n_super = cfg.n_layers // per
+        tail = ["mlstm"] * (cfg.n_layers - n_super * per)
+        return pattern, n_super, tail
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        pattern = ["attn"] * (per - 1) + ["cross"]
+        n_super = cfg.n_layers // per
+        tail = ["attn"] * (cfg.n_layers - n_super * per)
+        return pattern, n_super, tail
+    if cfg.family == "moe":
+        per = cfg.moe.every
+        if per <= 1:
+            return ["attn_moe"], cfg.n_layers, []
+        pattern = ["attn"] * (per - 1) + ["attn_moe"]
+        n_super = cfg.n_layers // per
+        tail = ["attn"] * (cfg.n_layers - n_super * per)
+        return pattern, n_super, tail
+    return ["attn"], cfg.n_layers, []
+
+
+def _block_decl(kind: str, cfg: ModelConfig):
+    if kind == "attn":
+        return {"attn": attention_decl(cfg), "mlp": mlp_decl(cfg)}
+    if kind == "attn_moe":
+        return {"attn": attention_decl(cfg), "moe": moe_mod.moe_decl(cfg)}
+    if kind == "cross":
+        return {"cross": attention_decl(cfg, cross=True), "mlp": mlp_decl(cfg)}
+    if kind == "mamba":
+        return ssm_mod.mamba2_decl(cfg)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_decl(cfg)
+    if kind == "slstm":
+        return xlstm_mod.slstm_decl(cfg)
+    if kind == "shared_attn":
+        return None  # parameters live once in params["shared_attn"]
+    raise ValueError(kind)
+
+
+def _stack_decl(decl, n: int):
+    return jax.tree.map(
+        lambda d: ParamDecl((n,) + d.shape, (None,) + d.axes, d.dtype, d.init, d.scale),
+        decl,
+        is_leaf=is_decl,
+    )
+
+
+def decl_model(cfg: ModelConfig):
+    """Full declaration tree for one architecture."""
+    pattern, n_super, tail = block_pattern(cfg)
+    decl: Dict[str, Any] = {"embed": embed_decl(cfg)}
+    decl["blocks"] = [
+        _stack_decl(_block_decl(kind, cfg), n_super)
+        for kind in pattern
+        if _block_decl(kind, cfg) is not None
+    ]
+    # map from pattern index -> blocks list index (shared_attn has no stack)
+    decl["tail"] = [_block_decl(kind, cfg) for kind in tail]
+    if "shared_attn" in pattern:
+        decl["shared_attn"] = {"attn": attention_decl(cfg), "mlp": mlp_decl(cfg)}
+    return decl
+
+
+def _pattern_param_slots(pattern: List[str]) -> List[Optional[int]]:
+    """pattern position -> index into params['blocks'] (None for shared)."""
+    slots, i = [], 0
+    for kind in pattern:
+        if kind == "shared_attn":
+            slots.append(None)
+        else:
+            slots.append(i)
+            i += 1
+    return slots
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_decl(cfg: ModelConfig, batch: int, max_len: int, window: Optional[int]):
+    k, hd = cfg.n_kv, cfg.hd()
+    size = min(window, max_len) if window else max_len
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, size, k, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, size, k, hd), dt),
+        "positions": jax.ShapeDtypeStruct((size,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _block_cache_decl(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("attn", "attn_moe", "shared_attn"):
+        return _attn_cache_decl(cfg, batch, max_len, cfg.window)
+    if kind == "cross":
+        k, hd = cfg.n_kv, cfg.hd()
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, cfg.n_vis_tokens, k, hd), dt),
+            "v": jax.ShapeDtypeStruct((batch, cfg.n_vis_tokens, k, hd), dt),
+        }
+    if kind == "mamba":
+        return ssm_mod.mamba2_cache_decl(cfg, batch)
+    if kind == "mlstm":
+        d_inner, nh, hd = xlstm_mod._mdims(cfg)
+        return {
+            "c": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if kind == "slstm":
+        nh = cfg.n_heads
+        hd = cfg.d_model // nh
+        shp = (batch, nh, hd)
+        return {
+            "c": jax.ShapeDtypeStruct(shp, jnp.float32),
+            "n": jax.ShapeDtypeStruct(shp, jnp.float32),
+            "h": jax.ShapeDtypeStruct(shp, jnp.float32),
+            "m": jax.ShapeDtypeStruct(shp, jnp.float32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(kind)
+
+
+def cache_decl(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache tree (ShapeDtypeStruct; no allocation)."""
+    pattern, n_super, tail = block_pattern(cfg)
+    stack = lambda tree, n: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+    )
+    return {
+        "pattern": [
+            stack(_block_cache_decl(kind, cfg, batch, max_len), n_super) for kind in pattern
+        ],
+        "tail": [_block_cache_decl(kind, cfg, batch, max_len) for kind in tail],
+    }
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int, vis_embeds=None):
+    """Concrete zero-initialized cache. Cross-attention K/V are precomputed
+    from the (stub) vision embeddings once, here."""
+    decl = cache_decl(cfg, batch, max_len)
+
+    def zeros(s):
+        if s.shape[-1:] == (0,):
+            return jnp.zeros(s.shape, s.dtype)
+        z = jnp.zeros(s.shape, s.dtype)
+        return z
+
+    cache = jax.tree.map(zeros, decl)
+    # positions arrays start at -1 (invalid)
+    cache = _map_named(cache, "positions", lambda z: z - 1)
+    pattern, n_super, tail = block_pattern(cfg)
+    slots = _pattern_param_slots(pattern)
+    if vis_embeds is not None:
+        for pi, kind in enumerate(pattern):
+            if kind != "cross":
+                continue
+            pstack = params["blocks"][slots[pi]]
+
+            def fill(layer_p, _):
+                from repro.models.layers import apply_norm as an
+
+                src = an(layer_p["cross"]["norm_kv"], vis_embeds, cfg)
+                kk = jnp.einsum("bsd,dhk->bshk", src, layer_p["cross"]["wk"].astype(vis_embeds.dtype))
+                vv = jnp.einsum("bsd,dhk->bshk", src, layer_p["cross"]["wv"].astype(vis_embeds.dtype))
+                return {"k": kk, "v": vv}
+
+            filled = jax.lax.map(lambda lp: fill(lp, None), pstack)
+            cache["pattern"][pi] = {"k": filled["k"], "v": filled["v"]}
+    return cache
+
+
+def _map_named(tree, name, fn):
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: (fn(v) if k == name else walk(v)) for k, v in t.items()}
+        if isinstance(t, list):
+            return [walk(v) for v in t]
+        return t
+
+    return walk(tree)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def apply_block(
+    kind: str,
+    p,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache=None,
+    vis_embeds=None,
+    shared_params=None,
+):
+    """Returns (x_out, new_cache, aux)."""
+    aux = _zero_aux()
+    if kind in ("attn", "attn_moe", "shared_attn"):
+        pp = shared_params if kind == "shared_attn" else p
+        dx, new_cache = attention_block(
+            pp["attn"], x, cfg, positions=positions, cache=cache, window=cfg.window
+        )
+        x = x + dx
+        if kind == "attn_moe":
+            dx, aux = moe_mod.moe_block(p["moe"], x, cfg)
+            x = x + dx
+        else:
+            x = x + mlp_block(pp["mlp"], x, cfg)
+        return x, new_cache, aux
+    if kind == "cross":
+        dx, new_cache = attention_block(
+            p["cross"], x, cfg, positions=positions, cross=True,
+            kv_src=vis_embeds if cache is None else None, cache=cache,
+        )
+        x = x + dx
+        x = x + mlp_block(p["mlp"], x, cfg)
+        return x, new_cache, aux
+    if kind == "mamba":
+        dx, new_cache = ssm_mod.mamba2_block(p, x, cfg, cache=cache)
+        return x + dx, new_cache, aux
+    if kind == "mlstm":
+        dx, new_cache = xlstm_mod.mlstm_block(p, x, cfg, cache=cache)
+        return x + dx, new_cache, aux
+    if kind == "slstm":
+        dx, new_cache = xlstm_mod.slstm_block(p, x, cfg, cache=cache)
+        return x + dx, new_cache, aux
+    raise ValueError(kind)
+
+
+def _zero_aux():
+    z = jnp.zeros((), jnp.float32)
+    return moe_mod.MoEAux(z, z, z)
+
+
+def _add_aux(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[Array] = None,       # (B, S) int32
+    embeds: Optional[Array] = None,       # (B, S, d) for frontend-stub archs
+    positions: Optional[Array] = None,    # (S,)
+    cache=None,
+    vis_embeds: Optional[Array] = None,   # (B, n_vis, d)
+):
+    """Returns (logits, new_cache, aux)."""
+    pattern, n_super, tail = block_pattern(cfg)
+    slots = _pattern_param_slots(pattern)
+    dtype = jnp.dtype(cfg.dtype)
+
+    if embeds is None:
+        x = embed_tokens(params["embed"], tokens, cfg).astype(dtype)
+    else:
+        x = embeds.astype(dtype)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if vis_embeds is not None:
+        vis_embeds = vis_embeds.astype(dtype)
+
+    shared = params.get("shared_attn")
+    has_cache = cache is not None
+
+    def superblock(x, block_params, block_cache):
+        aux = _zero_aux()
+        new_caches = []
+        for pi, kind in enumerate(pattern):
+            p = block_params[slots[pi]] if slots[pi] is not None else None
+            c = block_cache[pi] if has_cache else None
+            x, nc, a = apply_block(
+                kind, p, x, cfg,
+                positions=positions, cache=c, vis_embeds=vis_embeds, shared_params=shared,
+            )
+            aux = _add_aux(aux, a)
+            new_caches.append(nc)
+        return x, new_caches, aux
+
+    if cfg.remat:
+        superblock = jax.checkpoint(superblock)
+
+    if has_cache:
+        def scan_body(carry, xs):
+            x, aux = carry
+            block_params, block_cache = xs
+            x, new_caches, a = superblock(x, block_params, block_cache)
+            return (x, _add_aux(aux, a)), new_caches
+
+        (x, aux), new_pattern_cache = jax.lax.scan(
+            scan_body, (x, _zero_aux()), (params["blocks"], cache["pattern"]),
+            unroll=cfg.unroll_scans,
+        )
+    else:
+        def scan_body(carry, block_params):
+            x, aux = carry
+            x, _, a = superblock(x, block_params, None)
+            return (x, _add_aux(aux, a)), None
+
+        (x, aux), new_pattern_cache = jax.lax.scan(
+            scan_body, (x, _zero_aux()), params["blocks"], unroll=cfg.unroll_scans
+        )
+
+    new_tail = []
+    for ti, kind in enumerate(tail):
+        c = cache["tail"][ti] if has_cache else None
+        x, nc, a = apply_block(
+            kind, params["tail"][ti], x, cfg,
+            positions=positions, cache=c, vis_embeds=vis_embeds, shared_params=shared,
+        )
+        aux = _add_aux(aux, a)
+        new_tail.append(nc)
+
+    logits = lm_head(params["embed"], x, cfg)
+    new_cache = {"pattern": new_pattern_cache, "tail": new_tail} if has_cache else None
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence so (B, S, V) logits are never materialized)
+# ---------------------------------------------------------------------------
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, Array],
+):
+    """Causal LM loss. batch: tokens/embeds + labels (+ vis_embeds)."""
+    pattern, n_super, tail = block_pattern(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    labels = batch["labels"]
+
+    # run the trunk (without the head), then chunked softmax-xent
+    trunk_out, _, aux = _forward_trunk(params, cfg, batch)
+    b, s, d = trunk_out.shape
+    chunk = min(cfg.loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        trunk_out = jnp.pad(trunk_out, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = trunk_out.shape[1] // chunk
+    h_c = trunk_out.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    l_c = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h, lab = xs
+        if cfg.loss_bf16_logits:
+            # bf16 logits; the logsumexp accumulates in fp32 WITHOUT ever
+            # materializing an fp32 (B, chunk, V) tensor (§Perf iter 6: the
+            # fp32 logits were the largest buffers of every train cell)
+            logits = lm_head(params["embed"], h, cfg)
+            m = jnp.max(logits, axis=-1)
+            s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1, dtype=jnp.float32)
+            lse = m.astype(jnp.float32) + jnp.log(s)
+        else:
+            logits = lm_head(params["embed"], h, cfg).astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0].astype(jnp.float32)
+        valid = lab >= 0
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    body = jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (h_c, l_c),
+        unroll=cfg.unroll_scans,
+    )
+    loss = total / jnp.maximum(count, 1)
+    if cfg.moe.num_experts:
+        loss = loss + cfg.moe.aux_loss * aux.load_balance + cfg.moe.router_z_loss * aux.router_z
+    metrics = {
+        "loss": loss,
+        "aux_load_balance": aux.load_balance,
+        "aux_router_z": aux.router_z,
+        "moe_drop_fraction": aux.drop_fraction,
+        "tokens": count,
+    }
+    return loss, metrics
+
+
+def _forward_trunk(params, cfg: ModelConfig, batch):
+    """forward() minus the LM head (returns final hidden states)."""
+    pattern, n_super, tail = block_pattern(cfg)
+    slots = _pattern_param_slots(pattern)
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embed_frontend_stub:
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"], cfg).astype(dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    vis_embeds = batch.get("vis_embeds")
+    if vis_embeds is not None:
+        vis_embeds = vis_embeds.astype(dtype)
+    shared = params.get("shared_attn")
+
+    def superblock(x, block_params):
+        aux = _zero_aux()
+        for pi, kind in enumerate(pattern):
+            p = block_params[slots[pi]] if slots[pi] is not None else None
+            x, _, a = apply_block(
+                kind, p, x, cfg, positions=positions, vis_embeds=vis_embeds,
+                shared_params=shared,
+            )
+            aux = _add_aux(aux, a)
+        return x, aux
+
+    if cfg.remat:
+        superblock = jax.checkpoint(superblock)
+
+    def scan_body(carry, block_params):
+        x, aux = carry
+        x, a = superblock(x, block_params)
+        return (x, _add_aux(aux, a)), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, _zero_aux()), params["blocks"],
+                               unroll=cfg.unroll_scans)
+    for ti, kind in enumerate(tail):
+        x, _, a = apply_block(
+            kind, params["tail"][ti], x, cfg, positions=positions,
+            vis_embeds=vis_embeds, shared_params=shared,
+        )
+        aux = _add_aux(aux, a)
+    return x, None, aux
+
+
+def decode_step(params, cfg: ModelConfig, cache, token_or_embed, position):
+    """One serving step: (B, 1) token (or (B, 1, d) embed) + cache -> logits.
+
+    ``position``: scalar int32 absolute position of the new token.
+    """
+    positions = position[None] if position.ndim == 0 else position
+    if cfg.embed_frontend_stub:
+        logits, new_cache, _ = forward(
+            params, cfg, embeds=token_or_embed, positions=positions, cache=cache
+        )
+    else:
+        logits, new_cache, _ = forward(
+            params, cfg, tokens=token_or_embed, positions=positions, cache=cache
+        )
+    return logits, new_cache

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD) block for the zamba2 hybrid architecture.
+
+Training uses the chunked state-space-dual form: intra-chunk work is a
+masked quadratic form (MXU matmuls), inter-chunk state is carried by a
+scan — the TPU-idiomatic parallelization of the selective scan. Decode is
+the O(1)-state recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, norm_decl
+from repro.parallel.sharding import ParamDecl
+
+Array = jnp.ndarray
+
+SSD_CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.headdim
+    return d_inner, n_heads, cfg.ssm.headdim, cfg.ssm.state
+
+
+def mamba2_decl(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nh, hd, st = _dims(cfg)
+    conv_dim = d_inner + 2 * st                       # x, B, C go through the conv
+    return {
+        "norm": norm_decl(cfg),
+        "in_proj": ParamDecl((d, 2 * d_inner + 2 * st + nh), ("embed", "inner")),
+        "conv_w": ParamDecl((cfg.ssm.conv, conv_dim), (None, "inner")),
+        "conv_b": ParamDecl((conv_dim,), ("inner",), init="zeros"),
+        "a_log": ParamDecl((nh,), ("state_heads",), init="zeros"),
+        "dt_bias": ParamDecl((nh,), ("state_heads",), init="zeros"),
+        "d_skip": ParamDecl((nh,), ("state_heads",), init="ones"),
+        "norm_gate": norm_decl(cfg, d_inner),
+        "out_proj": ParamDecl((d_inner, d), ("inner", "embed_fsdp")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array] = None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)                      # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _split_proj(z_xbc_dt: Array, cfg: ModelConfig):
+    d_inner, nh, hd, st = _dims(cfg)
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner : 2 * d_inner + 2 * st]
+    dt = z_xbc_dt[..., 2 * d_inner + 2 * st :]
+    return z, xbc, dt
+
+
+def mamba2_block(
+    p, x: Array, cfg: ModelConfig, cache: Optional[dict] = None
+) -> Tuple[Array, Optional[dict]]:
+    """x: (B, S, d) -> (residual delta, updated cache)."""
+    d_inner, nh, hd, st = _dims(cfg)
+    dtype = x.dtype
+    b, s, _ = x.shape
+
+    xn = apply_norm(p["norm"], x, cfg)
+    proj = jnp.einsum("bsd,dk->bsk", xn, p["in_proj"].astype(dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype), conv_state)
+    xs = xbc[..., :d_inner].reshape(b, s, nh, hd)
+    b_in = xbc[..., d_inner : d_inner + st]                     # (B, S, st)
+    c_in = xbc[..., d_inner + st :]                             # (B, S, st)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B, S, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                      # (nh,)
+    log_decay = dt * a[None, None, :]                                 # (B, S, nh)  <= 0
+
+    if cache is None:
+        y, last_state = _ssd_chunked(xs, b_in, c_in, dt, log_decay, nh, hd, st,
+                                     chunk=cfg.ssd_chunk, unroll=cfg.unroll_scans)
+        new_cache = None
+    else:
+        h0 = cache["ssm"]                                             # (B, nh, hd, st)
+        decay = jnp.exp(log_decay[:, 0])                              # (B, nh)
+        dbx = jnp.einsum("bn,bs,bnd->bnds", dt[:, 0], b_in[:, 0], xs[:, 0].astype(jnp.float32))
+        h1 = h0 * decay[..., None, None] + dbx
+        y = jnp.einsum("bs,bnds->bnd", c_in[:, 0].astype(jnp.float32), h1)[:, None]
+        y = y.reshape(b, 1, nh, hd)
+        new_cache = {"conv": new_conv, "ssm": h1, "pos": cache["pos"] + s}
+        last_state = h1
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(dtype)
+    y = apply_norm(p["norm_gate"], y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype), cfg)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dtype))
+    return out, new_cache
+
+
+def _ssd_chunked(xs, b_in, c_in, dt, log_decay, nh, hd, st, chunk: int = SSD_CHUNK,
+                 unroll: bool = False):
+    """Chunked SSD: scan over chunks, quadratic (MXU) form within chunks.
+
+    xs: (B,S,nh,hd); b_in/c_in: (B,S,st); dt/log_decay: (B,S,nh).
+    Returns y (B,S,nh,hd) fp32 and final state (B,nh,hd,st).
+    """
+    b, s = xs.shape[0], xs.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+    nc = xs.shape[1] // chunk
+
+    def per_chunk(h, inputs):
+        xc, bc, cc, dtc, ldc = inputs            # (B,C,...) one chunk
+        cum = jnp.cumsum(ldc, axis=1)            # (B,C,nh) inclusive
+        # intra-chunk quadratic form: L[i,j] = exp(cum_i - cum_j) * dt_j, i>=j
+        li = cum[:, :, None, :] - cum[:, None, :, :]          # (B,C,C,nh)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0) * dtc[:, None, :, :]
+        cb = jnp.einsum("bis,bjs->bij", cc, bc).astype(jnp.float32)   # (B,C,C)
+        y_intra = jnp.einsum("bij,bijn,bjnd->bind", cb, lmat, xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bis,bnds,bin->bind", cc.astype(jnp.float32), h, jnp.exp(cum))
+        # state update
+        seg = jnp.exp(cum[:, -1:, :] - cum)                   # decay from i to chunk end
+        dbx = jnp.einsum("bin,bis,bind->bnds", dtc * seg, bc.astype(jnp.float32), xc.astype(jnp.float32))
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + dbx
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+    reshape = lambda t: t.reshape((b, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(
+        per_chunk, h0,
+        (reshape(xs), reshape(b_in), reshape(c_in), reshape(dt), reshape(log_decay)),
+        unroll=unroll,
+    )
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, nh, hd)[:, :s]
+    return y, h_last
+
+
+def mamba2_cache_decl(cfg: ModelConfig, batch: int):
+    d_inner, nh, hd, st = _dims(cfg)
+    conv_dim = d_inner + 2 * st
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.conv - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, hd, st), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

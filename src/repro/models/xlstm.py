@@ -1,0 +1,241 @@
+"""xLSTM blocks (mLSTM + sLSTM) for the xlstm-350m architecture.
+
+* mLSTM: matrix-memory LSTM with exponential gating. Training uses the
+  chunkwise-parallel quadratic form (same scan-over-chunks skeleton as the
+  SSD Mamba2 kernel — MXU matmuls within chunks, O(1) state across chunks).
+* sLSTM: scalar-memory LSTM with per-head recurrent weights — inherently
+  sequential, trained with a time scan (this is faithful to the paper: the
+  sLSTM's recurrence is not parallelizable over time).
+
+Both blocks carry their own up/down projections (the assigned config has
+``d_ff = 0``: there is no separate MLP).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, norm_decl
+from repro.parallel.sharding import ParamDecl
+
+Array = jnp.ndarray
+
+MLSTM_CHUNK = 256
+MLSTM_EXPAND = 2
+SLSTM_FF = 4 / 3
+
+
+def _mdims(cfg: ModelConfig):
+    d_inner = MLSTM_EXPAND * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_inner // nh
+    return d_inner, nh, hd
+
+
+def mlstm_decl(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nh, hd = _mdims(cfg)
+    return {
+        "norm": norm_decl(cfg),
+        "up_proj": ParamDecl((d, 2 * d_inner), ("embed", "inner")),
+        "wq": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "wk": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "wv": ParamDecl((d_inner, d_inner), ("inner", None)),
+        "w_if": ParamDecl((d_inner, 2 * nh), ("inner", None), scale=0.1),
+        "b_if": ParamDecl((2 * nh,), (None,), init="zeros"),
+        "norm_h": norm_decl(cfg, d_inner),
+        "down_proj": ParamDecl((d_inner, d), ("inner", "embed_fsdp")),
+    }
+
+
+def mlstm_block(
+    p, x: Array, cfg: ModelConfig, cache: Optional[dict] = None
+) -> Tuple[Array, Optional[dict]]:
+    d_inner, nh, hd = _mdims(cfg)
+    dtype = x.dtype
+    b, s, _ = x.shape
+    xn = apply_norm(p["norm"], x, cfg)
+    up = jnp.einsum("bsd,dk->bsk", xn, p["up_proj"].astype(dtype))
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    q = jnp.einsum("bsk,kj->bsj", xin, p["wq"].astype(dtype)).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsk,kj->bsj", xin, p["wk"].astype(dtype)).reshape(b, s, nh, hd)
+    v = jnp.einsum("bsk,kj->bsj", xin, p["wv"].astype(dtype)).reshape(b, s, nh, hd)
+    gates = jnp.einsum("bsk,kj->bsj", xin, p["w_if"].astype(dtype)).astype(jnp.float32) + p["b_if"]
+    log_i = gates[..., :nh]                                   # pre-activation input gate
+    log_f = jax.nn.log_sigmoid(gates[..., nh:])               # (B, S, nh) <= 0
+
+    if cache is None:
+        h, _, _, _ = _mlstm_chunked(q, k, v, log_i, log_f, nh, hd,
+                                    chunk=cfg.ssd_chunk, unroll=cfg.unroll_scans)
+        new_cache = None
+    else:
+        c0, n0, m0 = cache["c"], cache["n"], cache["m"]       # (B,nh,hd,hd),(B,nh,hd),(B,nh)
+        li, lf = log_i[:, 0], log_f[:, 0]                     # (B, nh)
+        m1 = jnp.maximum(lf + m0, li)
+        fg = jnp.exp(lf + m0 - m1)
+        ig = jnp.exp(li - m1)
+        kf = k[:, 0].astype(jnp.float32) / np.sqrt(hd)
+        c1 = c0 * fg[..., None, None] + ig[..., None, None] * jnp.einsum(
+            "bnd,bne->bnde", kf, v[:, 0].astype(jnp.float32)
+        )
+        n1 = n0 * fg[..., None] + ig[..., None] * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bnd,bnde->bne", qf, c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bnd,bnd->bn", qf, n1)), jnp.exp(-m1))
+        h = (num / den[..., None])[:, None]                   # (B,1,nh,hd)
+        new_cache = {"c": c1, "n": n1, "m": m1, "pos": cache["pos"] + s}
+
+    h = h.reshape(b, s, d_inner).astype(dtype)
+    h = apply_norm(p["norm_h"], h, cfg) * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("bsk,kd->bsd", h, p["down_proj"].astype(dtype)), new_cache
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, nh, hd, chunk: int = MLSTM_CHUNK,
+                   unroll: bool = False):
+    """Chunkwise-parallel stabilized mLSTM. Shapes (B,S,nh,hd)/(B,S,nh)."""
+    b, s = q.shape[0], q.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, pad4) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+    nc = q.shape[1] // chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    def per_chunk(carry, inp):
+        c, n, m = carry                                        # (B,nh,hd,hd),(B,nh,hd),(B,nh)
+        qc, kc, vc, lic, lfc = inp
+        qc = qc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32) * scale
+        vc = vc.astype(jnp.float32)
+        cum_f = jnp.cumsum(lfc, axis=1)                        # (B,C,nh) inclusive
+        # stabilizer within the chunk
+        log_a = cum_f + 0.0                                    # decay from chunk start to t
+        # intra: D[i,j] = exp(cum_f_i - cum_f_j + li_j), j <= i
+        dmat = cum_f[:, :, None, :] - cum_f[:, None, :, :] + lic[:, None, :, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        m_intra = dmat.max(axis=2)                             # (B,C,nh)
+        m_inter = log_a + m[:, None, :]                        # carried max decayed
+        m_new_t = jnp.maximum(m_intra, m_inter)                # (B,C,nh) per-step stabilizer
+        dw = jnp.exp(dmat - m_new_t[:, :, None, :])            # (B,C,C,nh)
+        sc = jnp.einsum("bind,bjnd->bijn", qc, kc)
+        num_intra = jnp.einsum("bijn,bjne->bine", sc * dw, vc)
+        # denominator tracked via the n vector (stabilized mLSTM)
+        n_intra = jnp.einsum("bijn,bjnd->bind", dw, kc)        # (B,C,nh,hd)
+        inter_w = jnp.exp(log_a + m[:, None, :] - m_new_t)     # (B,C,nh)
+        num_inter = jnp.einsum("bind,bnde->bine", qc, c) * inter_w[..., None]
+        n_tot = n_intra + n[:, None] * inter_w[..., None]
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(jnp.einsum("bind,bind->bin", qc, n_tot)), jnp.exp(-m_new_t))
+        h = num / den[..., None]                               # (B,C,nh,hd)
+
+        # state across the chunk boundary
+        tot_f = cum_f[:, -1]                                   # (B,nh)
+        m_next = jnp.maximum(tot_f + m, (tot_f[:, None, :] - cum_f + lic).max(axis=1))
+        upd_w = jnp.exp(tot_f[:, None, :] - cum_f + lic - m_next[:, None, :])  # (B,C,nh)
+        c_next = c * jnp.exp(tot_f + m - m_next)[..., None, None] + jnp.einsum(
+            "bin,bind,bine->bnde", upd_w, kc, vc
+        )
+        n_next = n * jnp.exp(tot_f + m - m_next)[..., None] + jnp.einsum(
+            "bin,bind->bnd", upd_w, kc
+        )
+        return (c_next, n_next, m_next), h
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    reshape = lambda t: t.reshape((b, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+    (c, n, m), hs = jax.lax.scan(
+        per_chunk, (c0, n0, m0),
+        (reshape(q), reshape(k), reshape(v), reshape(log_i), reshape(log_f)),
+        unroll=unroll,
+    )
+    h = hs.swapaxes(0, 1).reshape(b, nc * chunk, nh, -1)[:, :s]
+    return h, c, n, m
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_decl(cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    f = int(SLSTM_FF * d) // 128 * 128 or int(SLSTM_FF * d)
+    return {
+        "norm": norm_decl(cfg),
+        "w_in": ParamDecl((d, 4 * d), ("embed", "inner")),       # i, f, z, o pre-acts
+        "r": ParamDecl((nh, hd, 4 * hd), ("state_heads", None, None), scale=0.5 / np.sqrt(hd)),
+        "b": ParamDecl((4 * d,), (None,), init="zeros"),
+        "norm_h": norm_decl(cfg, d),
+        "ff_norm": norm_decl(cfg),
+        "ff_up": ParamDecl((d, 2 * f), ("embed", "ff")),
+        "ff_down": ParamDecl((f, d), ("ff", "embed_fsdp")),
+    }
+
+
+def _slstm_step(p_r, carry, gates_x, nh, hd):
+    """One sLSTM time step. gates_x: (B, 4d) input contribution."""
+    c, n, h, m = carry                                          # each (B, nh, hd); m (B,nh,hd)
+    b = gates_x.shape[0]
+    rec = jnp.einsum("bnd,ndk->bnk", h, p_r)                    # (B, nh, 4hd)
+    gx = gates_x.reshape(b, nh, 4 * hd) + rec
+    li, lf, z, o = jnp.split(gx, 4, axis=-1)                    # (B, nh, hd)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(lf) + m, li)
+    ig = jnp.exp(li - m_new)
+    fg = jnp.exp(jax.nn.log_sigmoid(lf) + m - m_new)
+    c_new = fg * c + ig * jnp.tanh(z)
+    n_new = jnp.maximum(fg * n + ig, 1e-6)
+    h_new = jax.nn.sigmoid(o) * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(
+    p, x: Array, cfg: ModelConfig, cache: Optional[dict] = None
+) -> Tuple[Array, Optional[dict]]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dtype = x.dtype
+    b, s, _ = x.shape
+    xn = apply_norm(p["norm"], x, cfg)
+    gates_x = (jnp.einsum("bsd,dk->bsk", xn, p["w_in"].astype(dtype)).astype(jnp.float32)
+               + p["b"])
+    p_r = p["r"].astype(jnp.float32)
+
+    if cache is None:
+        init = tuple(jnp.zeros((b, nh, hd), jnp.float32) for _ in range(3)) + (
+            jnp.full((b, nh, hd), -1e30, jnp.float32),
+        )
+
+        def step(carry, gx):
+            new = _slstm_step(p_r, carry, gx, nh, hd)
+            return new, new[2]
+
+        _, hs = jax.lax.scan(step, init, gates_x.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)                                   # (B, S, nh, hd)
+        new_cache = None
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        new = _slstm_step(p_r, carry, gates_x[:, 0], nh, hd)
+        h = new[2][:, None]
+        new_cache = {"c": new[0], "n": new[1], "h": new[2], "m": new[3], "pos": cache["pos"] + s}
+
+    h = h.reshape(b, s, d).astype(dtype)
+    y = apply_norm(p["norm_h"], h, cfg)
+    # GEGLU feed-forward (the sLSTM block's own FF, d_ff = 4/3 d)
+    yn = apply_norm(p["ff_norm"], x + y, cfg)
+    up = jnp.einsum("bsd,dk->bsk", yn, p["ff_up"].astype(dtype))
+    f = up.shape[-1] // 2
+    act = jax.nn.gelu(up[..., :f].astype(jnp.float32)).astype(dtype) * up[..., f:]
+    ff = jnp.einsum("bsf,fd->bsd", act, p["ff_down"].astype(dtype))
+    return y + ff, new_cache

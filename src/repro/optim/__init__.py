@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401

@@ -1,0 +1,84 @@
+"""AdamW with dtype-configurable moments and global-norm clipping.
+
+Moments may be stored in bf16 (``TrainConfig.moments_dtype``) — at
+400B-parameter scale (llama4-maverick on one 256-chip pod) fp32 m/v do not
+fit; bf16 moments + fp32 master weights is the deployed configuration
+(EXPERIMENTS.md discusses the memory budget). Optimizer state inherits each
+parameter's sharding (ZeRO: the state is sharded exactly like its param).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: Any
+    mu: Any
+    nu: Any
+    master: Any = None       # fp32 master copy when params are bf16
+
+
+def adamw_init(params, tc: TrainConfig) -> AdamWState:
+    mdt = jnp.dtype(tc.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    master = None
+    if jnp.dtype(tc.params_dtype) != jnp.float32:
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, tc: TrainConfig, lr):
+    """Returns (new_params, new_state, metrics).
+
+    With ``params_dtype="bfloat16"`` the update reads/writes the fp32
+    MASTER weights held in the optimizer state and re-emits bf16 params —
+    the train graph's weight traffic (and gradient reduction) is bf16.
+    """
+    mdt = jnp.dtype(tc.moments_dtype)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        gf = g.astype(jnp.float32) * scale
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m1 / bc1
+        vhat = v1 / bc2
+        w = master if master is not None else p.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * w
+        w1 = w - lr * delta
+        return w1.astype(p.dtype), m1.astype(mdt), v1.astype(mdt), w1
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    has_master = state.master is not None
+    flat_w = tdef.flatten_up_to(state.master) if has_master else [None] * len(flat_p)
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_w = tdef.unflatten([o[3] for o in out]) if has_master else None
+    return new_p, AdamWState(step, new_m, new_v, new_w), {"grad_norm": gnorm, "lr": lr}

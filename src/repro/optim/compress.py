@@ -1,0 +1,79 @@
+"""Int8 gradient compression with error feedback, for cross-pod reduction.
+
+At 2-pod scale the pod axis crosses DCN/optical links an order of magnitude
+slower than intra-pod ICI; compressing the cross-pod leg of the gradient
+all-reduce 4x (fp32 -> int8 + per-block scales) trades a little optimizer
+noise (bounded by error feedback) for link time.
+
+Design: hierarchical reduction —
+    1. intra-pod psum in full precision (fast links),
+    2. int8-quantize (per 256-block absmax scales) + error-feedback residual,
+    3. cross-pod psum of the int8 payload (as int32 to avoid overflow),
+    4. dequantize.
+
+``compressed_psum`` is written against ``shard_map`` axis names so it drops
+into the manual-collective train step; ``quantize``/``dequantize`` are pure
+and unit-tested on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+BLOCK = 256
+
+
+class Quantized(NamedTuple):
+    q: Array        # int8 payload
+    scale: Array    # (n_blocks,) fp32 absmax scales
+    n: int          # original length
+
+
+def quantize(x: Array) -> Tuple[Quantized, Array]:
+    """Returns (quantized, residual). x is flattened; blocks of 256."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(fp / scale[:, None]), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    residual = (flat - deq).reshape(x.shape).astype(x.dtype)
+    return Quantized(q, scale, n), residual
+
+
+def dequantize(qt: Quantized, shape, dtype) -> Array:
+    deq = (qt.q.astype(jnp.float32) * qt.scale[:, None]).reshape(-1)[: qt.n]
+    return deq.reshape(shape).astype(dtype)
+
+
+def compressed_psum(grad: Array, error: Array, *, fast_axis: str, slow_axis: str):
+    """Hierarchical error-feedback psum. Call inside shard_map.
+
+    ``error`` is this worker's running error-feedback buffer (same shape as
+    ``grad``); returns (reduced_grad, new_error).
+
+    Pods must agree on ONE scale per block before summing int8 payloads
+    (Σ q_p·s_p ≠ (Σ q_p)·mean s_p): a pmax of the block absmaxes (a tiny
+    fp32 vector, n/256 elements) establishes the shared scale.
+    """
+    g = jax.lax.psum(grad, fast_axis)                    # full precision intra-pod
+    g = g + error                                        # error feedback
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    # shared per-block scale across pods (small collective)
+    absmax = jnp.max(jnp.abs(fp), axis=1)
+    scale = jax.lax.pmax(absmax, slow_axis) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(fp / scale[:, None]), -127, 127).astype(jnp.int8)
+    local_deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    residual = (flat - local_deq).reshape(grad.shape).astype(grad.dtype)
+    qsum = jax.lax.psum(q.astype(jnp.int32), slow_axis)  # compressed cross-pod
+    deq = (qsum.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return deq.reshape(grad.shape).astype(grad.dtype), residual

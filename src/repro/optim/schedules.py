@@ -1,0 +1,27 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, minicpm arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_schedule(tc: TrainConfig):
+    warmup = max(tc.warmup_steps, 1)
+    total = tc.total_steps
+
+    def cosine(step):
+        warm = jnp.minimum(step / warmup, 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return tc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+    def wsd(step):
+        """Warmup -> Stable (flat) -> Decay (exponential-ish tail)."""
+        warm = jnp.minimum(step / warmup, 1.0)
+        decay_start = int(total * tc.decay_start)
+        frac = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        decay = 0.5 ** (frac * 8.0)   # ~2^-8 at the end, per minicpm's sharp tail
+        return tc.lr * warm * jnp.where(step < decay_start, 1.0, decay)
+
+    return {"cosine": cosine, "wsd": wsd}[tc.schedule]

@@ -1,0 +1,1 @@
+from repro.runtime.supervisor import Supervisor, TrainLoopConfig  # noqa: F401

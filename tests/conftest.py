@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see the default single CPU device (the dry-run sets its own
+# virtual device count in a separate process). Keep threads tame on CI.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,57 @@
+"""HLO collective parsing + roofline term math (pure string/number tests)."""
+
+import pytest
+
+from repro.launch.hlo_analysis import (
+    ICI_BW, PEAK_FLOPS, HBM_BW, _shape_bytes, dominant_term, parse_collectives,
+    roofline_terms,
+)
+
+HLO = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[16,512]) -> f32[16,512] {
+  %p0 = f32[16,512]{1,0} parameter(0)
+  %ag = f32[256,512]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %c = bf16[256,512]{1,0} convert(%ag)
+  %ar = bf16[256,512]{1,0} all-reduce(%c), to_apply=%add
+  %a2a = bf16[256,512]{1,0} all-to-all(%ar), dimensions={0}
+  %rs = bf16[16,512]{1,0} reduce-scatter(%a2a), dimensions={0}
+  %cp = bf16[16,512]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+  ROOT %out = f32[16,512]{1,0} convert(%cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,512]") == 16 * 512 * 4
+    assert _shape_bytes("bf16[256,512]") == 256 * 512 * 2
+    assert _shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+    assert _shape_bytes("pred[8]") == 8
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_collectives():
+    colls = parse_collectives(HLO)
+    assert colls["all-gather"]["count"] == 1
+    assert colls["all-gather"]["operand_bytes"] == 16 * 512 * 4
+    assert colls["all-gather"]["result_bytes"] == 256 * 512 * 4
+    assert colls["all-reduce"]["operand_bytes"] == 256 * 512 * 2
+    assert colls["all-to-all"]["count"] == 1
+    assert colls["reduce-scatter"]["operand_bytes"] == 256 * 512 * 2
+    assert colls["collective-permute"]["count"] == 1
+    total = sum(v["operand_bytes"] for v in colls.values())
+    assert total > 0
+
+
+def test_roofline_terms_and_dominant():
+    terms = roofline_terms(
+        flops=256 * PEAK_FLOPS,          # exactly 1 s of compute on 256 chips
+        bytes_accessed=256 * HBM_BW * 2,  # 2 s of HBM
+        collective_bytes=256 * ICI_BW * 0.5,
+        n_chips=256,
+    )
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(2.0)
+    assert terms["collective_s"] == pytest.approx(0.5)
+    assert dominant_term(terms) == "memory"

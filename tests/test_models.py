@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + finiteness assertions, and decode==forward consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, ALIASES, get_config
+from repro.models import model as M
+from repro.parallel.sharding import init_params, param_count
+
+ALL_ARCHS = list(ALIASES.keys())
+DECODE_ARCHS = [
+    "tinyllama-1.1b", "zamba2-1.2b", "xlstm-350m", "dbrx-132b",
+    "h2o-danube-1.8b", "llama-3.2-vision-90b", "musicgen-large",
+]
+
+
+def _smoke_batch(sc, B=2, S=64, seed=0):
+    rs = np.random.RandomState(seed)
+    batch = {"labels": jnp.asarray(rs.randint(0, sc.vocab, (B, S)))}
+    kwargs = {}
+    if sc.embed_frontend_stub:
+        batch["embeds"] = jax.random.normal(jax.random.PRNGKey(1), (B, S, sc.d_model))
+        kwargs["embeds"] = batch["embeds"]
+    else:
+        batch["tokens"] = jnp.asarray(rs.randint(0, sc.vocab, (B, S)))
+        kwargs["tokens"] = batch["tokens"]
+    if sc.n_vis_tokens:
+        vis = jax.random.normal(jax.random.PRNGKey(2), (B, sc.n_vis_tokens, sc.d_model))
+        batch["vis_embeds"] = vis
+        kwargs["vis_embeds"] = vis
+    return batch, kwargs
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_grad(arch):
+    sc = get_config(arch).smoke()
+    decls = M.decl_model(sc)
+    assert param_count(decls) > 0
+    params = init_params(decls, jax.random.PRNGKey(0))
+    batch, kwargs = _smoke_batch(sc)
+
+    logits, _, _ = M.forward(params, sc, **kwargs)
+    assert logits.shape == (2, 64, sc.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf logits"
+
+    (loss, metrics), grads = jax.value_and_grad(M.loss_fn, has_aux=True)(params, sc, batch)
+    assert np.isfinite(float(loss)), f"{arch}: NaN loss"
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    sc = get_config(arch).smoke()
+    params = init_params(M.decl_model(sc), jax.random.PRNGKey(0))
+    B, S = 1, 20
+    batch, kwargs = _smoke_batch(sc, B=B, S=S)
+    logits, _, _ = M.forward(params, sc, **kwargs)
+    vis = batch.get("vis_embeds")
+    cache = M.init_cache(params, sc, B, max_len=S, vis_embeds=vis)
+    dec = []
+    for t in range(S):
+        tok = (batch["embeds"][:, t:t + 1] if sc.embed_frontend_stub
+               else batch["tokens"][:, t:t + 1])
+        lg, cache = M.decode_step(params, sc, cache, tok, jnp.asarray(t, jnp.int32))
+        dec.append(np.asarray(lg[:, 0]))
+    dec = np.stack(dec, axis=1)
+    ref = np.asarray(logits)
+    err = np.abs(dec - ref).max() / (np.abs(ref).max() + 1e-9)
+    assert err < 2e-2, f"{arch}: decode/forward mismatch rel err {err:.3e}"
+
+
+def test_sliding_window_ring_cache():
+    """SWA decode beyond the window must match forward (ring buffer wrap)."""
+    sc = get_config("h2o-danube-1.8b").smoke()     # window = 64
+    import dataclasses
+    sc = dataclasses.replace(sc, window=16)
+    params = init_params(M.decl_model(sc), jax.random.PRNGKey(0))
+    B, S = 1, 40                                   # 2.5x the window
+    batch, kwargs = _smoke_batch(sc, B=B, S=S)
+    logits, _, _ = M.forward(params, sc, **kwargs)
+    cache = M.init_cache(params, sc, B, max_len=S)
+    dec = []
+    for t in range(S):
+        lg, cache = M.decode_step(
+            params, sc, cache, batch["tokens"][:, t:t + 1], jnp.asarray(t, jnp.int32)
+        )
+        dec.append(np.asarray(lg[:, 0]))
+    dec = np.stack(dec, axis=1)
+    err = np.abs(dec - np.asarray(logits)).max() / (np.abs(np.asarray(logits)).max() + 1e-9)
+    assert err < 2e-2, f"ring-cache mismatch {err:.3e}"
+
+
+def test_block_patterns():
+    from repro.models.model import block_pattern
+
+    pat, n, tail = block_pattern(get_config("zamba2-1.2b"))
+    assert pat == ["mamba"] * 5 + ["shared_attn"] and n == 6 and tail == ["mamba"] * 2
+    pat, n, tail = block_pattern(get_config("llama4-maverick-400b-a17b"))
+    assert pat == ["attn", "attn_moe"] and n == 24 and tail == []
+    pat, n, tail = block_pattern(get_config("llama-3.2-vision-90b"))
+    assert pat == ["attn"] * 4 + ["cross"] and n == 20 and tail == []
+    pat, n, tail = block_pattern(get_config("xlstm-350m"))
+    assert pat == ["mlstm", "slstm"] and n == 12
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters."""
+    specs = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    }
+    for arch, (L, d, h, kv, ff, v) in specs.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == (L, d, h, kv, ff, v), arch
+    assert get_config("zamba2-1.2b").ssm.state == 64
+    assert get_config("dbrx-132b").moe.num_experts == 16
+    assert get_config("dbrx-132b").moe.top_k == 4
+    assert get_config("llama4-maverick-400b-a17b").moe.num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe.top_k == 1
+
+
+def test_param_counts_in_expected_range():
+    """Total parameters should be within ~25% of the arch's nameplate."""
+    expect = {
+        "tinyllama-1.1b": 1.1e9, "stablelm-1.6b": 1.6e9, "h2o-danube-1.8b": 1.8e9,
+        "minicpm-2b": 2.4e9, "dbrx-132b": 132e9, "llama4-maverick-400b-a17b": 400e9,
+        "llama-3.2-vision-90b": 90e9, "zamba2-1.2b": 1.2e9, "musicgen-large": 3.3e9,
+        "xlstm-350m": 0.35e9,
+    }
+    for arch, n in expect.items():
+        got = param_count(M.decl_model(get_config(arch)))
+        assert 0.7 * n < got < 1.45 * n, f"{arch}: {got/1e9:.2f}B vs nameplate {n/1e9:.2f}B"

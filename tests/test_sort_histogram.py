@@ -1,0 +1,68 @@
+"""Multisplit-sort (paper §7.1) and device histogram (paper §7.3)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.histogram import histogram_even, histogram_range
+from repro.core.identifiers import delta_buckets
+from repro.core.multisplit import multisplit_ref
+from repro.core.sort import direct_sort_multisplit, radix_sort, rb_sort_multisplit
+
+
+@pytest.mark.parametrize("radix_bits", [4, 6, 7, 8])
+def test_radix_sort_vs_numpy(radix_bits):
+    rng = np.random.RandomState(radix_bits)
+    keys = rng.randint(0, 2**32, size=5000, dtype=np.uint32)
+    vals = np.arange(5000, dtype=np.int32)
+    ks, vs = radix_sort(jnp.asarray(keys), jnp.asarray(vals), radix_bits=radix_bits)
+    order = np.argsort(keys, kind="stable")
+    np.testing.assert_array_equal(np.asarray(ks), keys[order])
+    np.testing.assert_array_equal(np.asarray(vs), vals[order])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=400))
+def test_property_radix_sort(data):
+    keys = np.array(data, dtype=np.uint32)
+    ks, _ = radix_sort(jnp.asarray(keys), radix_bits=8)
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(keys))
+
+
+def test_rb_sort_baseline_matches_multisplit():
+    rng = np.random.RandomState(0)
+    keys = jnp.asarray(rng.randint(0, 2**30, 4096, dtype=np.uint32))
+    vals = jnp.arange(4096, dtype=jnp.int32)
+    bf = delta_buckets(32, 2**30)
+    ref = multisplit_ref(keys, bf, vals)
+    rb = rb_sort_multisplit(keys, bf, vals)
+    np.testing.assert_array_equal(np.asarray(rb.keys), np.asarray(ref.keys))
+    np.testing.assert_array_equal(np.asarray(rb.values), np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(rb.bucket_counts), np.asarray(ref.bucket_counts))
+
+
+def test_direct_sort_baseline():
+    keys = jnp.asarray(np.random.RandomState(0).randint(0, 2**30, 1000, dtype=np.uint32))
+    ks, _ = direct_sort_multisplit(keys)
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(np.asarray(keys)))
+
+
+@pytest.mark.parametrize("m", [2, 16, 64, 256])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_histogram_even(m, use_pallas):
+    keys = jnp.asarray(np.random.RandomState(m).uniform(0, 1024, 20000).astype(np.float32))
+    h = histogram_even(keys, 0.0, 1024.0, m, use_pallas=use_pallas)
+    expect, _ = np.histogram(np.asarray(keys), bins=m, range=(0, 1024))
+    np.testing.assert_array_equal(np.asarray(h), expect)
+
+
+def test_histogram_range():
+    rng = np.random.RandomState(1)
+    keys = jnp.asarray(rng.uniform(0, 1000, 10000).astype(np.float32))
+    splitters = jnp.asarray(np.sort(rng.uniform(0, 1000, 15)).astype(np.float32))
+    h = histogram_range(keys, splitters)
+    expect, _ = np.histogram(
+        np.asarray(keys), bins=np.concatenate([[-np.inf], np.asarray(splitters), [np.inf]])
+    )
+    np.testing.assert_array_equal(np.asarray(h), expect)
