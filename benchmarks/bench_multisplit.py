@@ -1,11 +1,20 @@
 """Paper Tables 3/4/5 analogue: multisplit throughput vs bucket count, for
 DMS / WMS / BMS vs the sort-based baselines (RB-sort, direct key sort), for
-key-only and key-value, plus Table 6's input-distribution sensitivity.
+key-only and key-value, plus Table 6's input-distribution sensitivity, plus
+the fused-plan vs legacy-unfused pipeline comparison (DESIGN.md §6), which
+appends a trajectory point to BENCH_multisplit.json.
 
 Rates are Mkeys/s on THIS host (CPU — relative standings are the
-reproduction target; absolute GPU numbers are in the paper)."""
+reproduction target; absolute GPU numbers are in the paper).
+
+Set ``MS_BENCH_N`` (power-of-two exponent, e.g. 14) to shrink the problem
+for CI smoke runs."""
 
 import functools
+import json
+import os
+import time
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -13,11 +22,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import bench, row
 from repro.core.identifiers import delta_buckets
-from repro.core.multisplit import multisplit
+from repro.core.multisplit import multisplit, multisplit_unfused
 from repro.core.sort import direct_sort_multisplit, rb_sort_multisplit
 
-N = 1 << 18
+N = 1 << int(os.environ.get("MS_BENCH_N", "18"))
 M_SWEEP = (2, 8, 32, 128, 256)
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_multisplit.json"
 
 
 def _keys(n=N, seed=0):
@@ -72,10 +82,51 @@ def run_distributions():
         row(f"multisplit/dist={name}/m=256/bms", t, f"{N / t / 1e6:.1f} Mkeys/s")
 
 
+def run_fused_vs_legacy(emit_json: bool = True):
+    """The tentpole measurement: the plan's fused single-pass postscan vs the
+    legacy three-pass (positions, key reorder, value reorder) orchestration.
+    Appends one trajectory point per run to BENCH_multisplit.json."""
+    results = {}
+    keys = _keys()
+    vals = jnp.arange(N, dtype=jnp.int32)
+    for m in (32, 256):
+        bf = delta_buckets(m, 2**30)
+        for method in ("wms", "bms"):
+            fused = jax.jit(lambda k, v, bf=bf, me=method: multisplit(
+                k, bf, values=v, method=me).keys)
+            legacy = jax.jit(lambda k, v, bf=bf, me=method: multisplit_unfused(
+                k, bf, values=v, method=me).keys)
+            t_f = bench(fused, keys, vals)
+            t_l = bench(legacy, keys, vals)
+            tag = f"m={m}/{method}"
+            results[f"{tag}/fused_mkeys_s"] = round(N / t_f / 1e6, 2)
+            results[f"{tag}/legacy_mkeys_s"] = round(N / t_l / 1e6, 2)
+            results[f"{tag}/speedup"] = round(t_l / t_f, 3)
+            row(f"multisplit/kv/{tag}/fused-plan", t_f, f"{N / t_f / 1e6:.1f} Mkeys/s")
+            row(f"multisplit/kv/{tag}/legacy-unfused", t_l,
+                f"{N / t_l / 1e6:.1f} Mkeys/s ({t_l / t_f:.2f}x slower)")
+    if emit_json:
+        history = []
+        if BENCH_JSON.exists():
+            history = json.loads(BENCH_JSON.read_text())
+        history.append({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "n": N,
+            "key_value": True,
+            "host": jax.default_backend(),
+            "backend": "vmap",
+            "results": results,
+        })
+        BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
+        print(f"# trajectory point appended to {BENCH_JSON.name}")
+    return results
+
+
 def main():
     run(key_value=False)
     run(key_value=True)
     run_distributions()
+    run_fused_vs_legacy()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,12 @@
 """Paper Tables 7/8 analogue: multisplit-based radix sort vs radix size r,
-against the platform sort (jax.lax.sort standing in for CUB)."""
+against the platform sort (jax.lax.sort standing in for CUB). Includes the
+fused in-kernel digit path (plan layer, DESIGN.md §5) on a reduced shape —
+the interpreter makes absolute pallas numbers meaningless on CPU, but the
+row proves the zero-label pipeline end-to-end.
+
+Set ``MS_BENCH_N`` (power-of-two exponent) to shrink for CI smoke runs."""
+
+import os
 
 import numpy as np
 import jax
@@ -8,7 +15,8 @@ import jax.numpy as jnp
 from benchmarks.common import bench, row
 from repro.core.sort import radix_sort
 
-N = 1 << 18
+N = 1 << int(os.environ.get("MS_BENCH_N", "18"))
+N_PALLAS = min(N, 1 << 14)
 
 
 def main():
@@ -30,6 +38,14 @@ def main():
         row(f"sort/keys/multisplit-sort/r={r}", t, f"{N / t / 1e6:.1f} Mkeys/s")
     t = bench(jax.jit(jax.lax.sort), keys)
     row("sort/keys/platform-sort", t, f"{N / t / 1e6:.1f} Mkeys/s")
+
+    # Fused in-kernel digit path (no host label array): interpret-mode proof
+    # run on a reduced shape; compiled TPU numbers are the deployment story.
+    kp = keys[:N_PALLAS]
+    f = jax.jit(lambda k: radix_sort(k, radix_bits=8, use_pallas=True, tile=1024)[0])
+    t = bench(f, kp, warmup=1, trials=1)
+    row("sort/keys/multisplit-sort/r=8/fused-pallas-interpret", t,
+        f"{N_PALLAS / t / 1e6:.2f} Mkeys/s (interpret)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,136 @@
+"""Version-guarded shims for jax APIs that moved between releases.
+
+The codebase targets the modern jax mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.shard_map(check_vma=...)``,
+``jax.make_mesh(axis_types=...)``); the pinned toolchain ships jax 0.4.37
+where those names do not exist yet. Everything version-dependent funnels
+through this one module:
+
+* library code imports :func:`get_abstract_mesh` / :func:`shard_map`
+  directly, and
+* :func:`install` (run on ``import repro``) backfills the missing public
+  names onto ``jax`` / ``jax.sharding`` so tests and scripts written
+  against the modern API run unchanged on the old runtime.
+
+On a new-enough jax every shim is a straight pass-through.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+
+__all__ = [
+    "get_abstract_mesh",
+    "set_mesh",
+    "shard_map",
+    "make_mesh",
+    "install",
+]
+
+
+def get_abstract_mesh():
+    """The mesh of the current mesh context (abstract on new jax).
+
+    Falls back to the physical mesh recorded by ``with mesh:`` /
+    ``pxla.thread_resources`` on jax < 0.5, which behaves identically for
+    the two uses we have: reading ``axis_names`` and ``shape`` during
+    tracing. Returns an empty mesh outside any context.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None and not isinstance(fn, _AbstractMeshShim):
+        return fn()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
+class _AbstractMeshShim:
+    """Marker-carrying callable installed as jax.sharding.get_abstract_mesh."""
+
+    def __call__(self):
+        return get_abstract_mesh()
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` when available; else the Mesh's own context manager."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None and fn is not set_mesh:
+        return fn(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    """``jax.shard_map`` with ``check_vma`` mapped to old ``check_rep``."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None and fn is not shard_map:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    params = inspect.signature(_sm).parameters
+    if "check_vma" in kw and "check_vma" not in params:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on old jax (dropped:
+    pre-sharding-in-types jax treats every axis as Auto anyway)."""
+    base = getattr(jax, "_compat_orig_make_mesh", jax.make_mesh)
+    if "axis_types" in inspect.signature(base).parameters:
+        return base(axis_shapes, axis_names, axis_types=axis_types, devices=devices)
+    return base(axis_shapes, axis_names, devices=devices)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis (``jax.lax.axis_size`` on new jax)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None and fn is not axis_size:
+        return fn(axis_name)
+    from jax._src import core as _core
+
+    frame = _core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a dict (old jax: list[dict])."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    """Backfill missing public jax names (idempotent, version-guarded)."""
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = axis_size
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _AbstractMeshShim()
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        if not hasattr(jax, "_compat_orig_make_mesh"):
+            jax._compat_orig_make_mesh = jax.make_mesh
+        jax.make_mesh = make_mesh
+    for name, old in [
+        ("flatten_with_path", "tree_flatten_with_path"),
+        ("map_with_path", "tree_map_with_path"),
+        ("leaves_with_path", "tree_leaves_with_path"),
+    ]:
+        if not hasattr(jax.tree, name) and hasattr(jax.tree_util, old):
+            setattr(jax.tree, name, getattr(jax.tree_util, old))

@@ -24,10 +24,37 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as _shard_map
 from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier
+from repro.core.plan import make_plan, resolve_backend
 
 Array = jnp.ndarray
+
+
+def _local_plan(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values,
+    method: str,
+    use_pallas: bool,
+    backend,
+    tile,
+):
+    """The per-device local stage IS a multisplit plan (DESIGN.md §3/§7):
+    the device shard is one subproblem of the same {prescan, scan, postscan}
+    pipeline that tiles are — so it is built from the shared plan layer
+    instead of re-assembling ``ms.multisplit`` internals."""
+    plan = make_plan(
+        keys.shape[0],
+        bucket_fn.num_buckets,
+        method=method,
+        key_value=values is not None,
+        backend=resolve_backend(use_pallas, True, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+    )
+    return plan(keys, values)
 
 
 class ShardedMultisplitResult(NamedTuple):
@@ -106,6 +133,8 @@ def multisplit_sharded(
     axis_name: str,
     method: str = "bms",
     use_pallas: bool = False,
+    backend: Optional[str] = None,
+    tile: Optional[int] = None,
     transport: str = "dense",
 ) -> ShardedMultisplitResult:
     """Exact global stable multisplit across a mesh axis.
@@ -125,7 +154,7 @@ def multisplit_sharded(
     my_idx = jax.lax.axis_index(axis_name)
 
     # ---- local stage: reorder shard bucket-major, get local histogram ----
-    local = ms.multisplit(keys, bucket_fn, values, method=method, use_pallas=use_pallas)
+    local = _local_plan(keys, bucket_fn, values, method, use_pallas, backend, tile)
 
     # ---- global stage: ONE tiny collective over H (D, m) + replicated scan ----
     hist_all = jax.lax.all_gather(local.bucket_counts, axis_name)    # (D, m)
@@ -166,6 +195,8 @@ def multisplit_bucket_sharded(
     capacity: int,
     method: str = "bms",
     use_pallas: bool = False,
+    backend: Optional[str] = None,
+    tile: Optional[int] = None,
     transport: str = "dense",
 ) -> BucketShardedResult:
     """Bucket-sharded multisplit: device ``d`` receives all elements of
@@ -189,7 +220,7 @@ def multisplit_bucket_sharded(
     n_dev = keys.shape[0]
 
     # local stage
-    local = ms.multisplit(keys, bucket_fn, values, method=method, use_pallas=use_pallas)
+    local = _local_plan(keys, bucket_fn, values, method, use_pallas, backend, tile)
     hist_all = jax.lax.all_gather(local.bucket_counts, axis_name)      # (D, m)
 
     group = hist_all.reshape(d_num, d_num, mb)                          # (src, dstgroup, mb)
@@ -273,4 +304,4 @@ def make_multisplit_sharded(
     out_specs = ShardedMultisplitResult(
         P(axis_name), P(axis_name) if key_value else None, P(), P()
     )
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)

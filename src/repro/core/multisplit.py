@@ -10,7 +10,7 @@ Structure follows the paper's parallel model exactly (§4.1):
              buckets anywhere + #elements of bucket ``b`` in earlier tiles.
 * postscan:  per-tile local offsets (stable rank within bucket inside the
              tile), final position ``p(i) = G[b, tile] + local_offset``
-             (paper eq. (2)); optionally reorder the tile bucket-major
+             (paper eq. (2)); for WMS/BMS the tile is reordered bucket-major
              first (paper §4.7) so the global scatter writes contiguous
              per-bucket runs.
 
@@ -18,6 +18,12 @@ Hardware adaptation (see DESIGN.md §2): the warp-ballot direct solve is
 replaced by a one-hot matrix direct solve over a VMEM-resident tile — the
 same binary matrix ``H̄`` of paper §4.5, built with vector compares instead
 of ``__ballot`` and reduced/scanned with MXU/VPU ops instead of ``__popc``.
+
+Execution is owned by :mod:`repro.core.plan` (DESIGN.md §3): ``multisplit``
+resolves a :class:`repro.core.plan.MultisplitPlan` and runs it, so the
+postscan + reorder is ONE fused evaluation per tile on every backend. The
+pre-plan three-pass host orchestration survives only as
+:func:`multisplit_unfused`, the fused-vs-legacy benchmark baseline.
 
 Three variants map to the paper's three implementations:
 
@@ -28,28 +34,30 @@ Three variants map to the paper's three implementations:
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.identifiers import BucketIdentifier
+from repro.core.plan import (            # re-exported for consumers/tests
+    BMS_TILE,
+    MultisplitResult,
+    WMS_TILE,
+    global_scan,
+    make_plan,
+    pad_to_tiles as _pad_to_tiles,
+    resolve_backend,
+    tile_local_offsets,
+)
 
 Array = jnp.ndarray
 
-# Tile sizes: "warp" tiles vs "block" tiles. On TPU these are VMEM tile
-# heights; BMS tiles are N_warp x larger, exactly the paper's Table 1 sizing
-# knob (larger subproblem => narrower global scan matrix H).
-WMS_TILE = 1024
-BMS_TILE = 4096
-
-
-class MultisplitResult(NamedTuple):
-    keys: Array                    # permuted keys, bucket-major, stable
-    values: Optional[Array]        # permuted values (None for key-only)
-    bucket_starts: Array           # (m,) start index of each bucket
-    bucket_counts: Array           # (m,) histogram
-    permutation: Array             # (n,) dest position of input element i
+__all__ = [
+    "WMS_TILE", "BMS_TILE", "MultisplitResult", "global_scan",
+    "tile_histogram", "tile_local_offsets", "multisplit_ref", "multisplit",
+    "multisplit_unfused", "prescan", "postscan_positions",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -62,16 +70,8 @@ def tile_histogram(bucket_ids: Array, num_buckets: int) -> Array:
     return one_hot.sum(axis=0)
 
 
-def tile_local_offsets(bucket_ids: Array, num_buckets: int) -> Tuple[Array, Array]:
-    """Stable in-bucket rank of each element of one tile + tile histogram.
-
-    Exclusive column cumsum of H̄ picked out at each element's own bucket —
-    paper Alg. 3 without ballots.
-    """
-    one_hot = (bucket_ids[:, None] == jnp.arange(num_buckets)[None, :]).astype(jnp.int32)
-    incl = jnp.cumsum(one_hot, axis=0)
-    local = incl[jnp.arange(bucket_ids.shape[0]), bucket_ids] - 1
-    return local.astype(jnp.int32), incl[-1]
+# tile_local_offsets (stable in-bucket rank + tile histogram, paper Alg. 3
+# without ballots) is defined once in repro.core.plan and re-exported above.
 
 
 # ---------------------------------------------------------------------------
@@ -84,50 +84,22 @@ def multisplit_ref(
     values: Optional[Array] = None,
 ) -> MultisplitResult:
     """O(n·m) direct evaluation of eq. (1). Oracle for everything else."""
-    m = bucket_fn.num_buckets
-    ids = bucket_fn(keys)
-    local, hist = tile_local_offsets(ids, m)
-    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)])
-    perm = starts[ids] + local
-    keys_out = jnp.zeros_like(keys).at[perm].set(keys)
-    values_out = None
-    if values is not None:
-        values_out = jnp.zeros_like(values).at[perm].set(values)
-    return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
+    from repro.core.plan import _direct_solve_reference
+
+    return _direct_solve_reference(keys, bucket_fn, values)
 
 
 # ---------------------------------------------------------------------------
-# Tiled multisplit: {prescan, scan, postscan}
+# Tiled stage helpers (kept public: histogram.py & tests build on them)
 # ---------------------------------------------------------------------------
-
-def _pad_to_tiles(x: Array, tile: int, fill) -> Tuple[Array, int]:
-    n = x.shape[0]
-    n_pad = (-n) % tile
-    if n_pad:
-        x = jnp.concatenate([x, jnp.full((n_pad,) + x.shape[1:], fill, x.dtype)])
-    return x, n_pad
-
 
 def prescan(ids_tiled: Array, num_buckets: int) -> Array:
     """Local stage 1: per-tile histograms -> H with shape (L, m)."""
     return jax.vmap(lambda t: tile_histogram(t, num_buckets))(ids_tiled)
 
 
-def global_scan(hist_per_tile: Array) -> Array:
-    """The ONE global operation: exclusive scan over row-vectorized H.
-
-    ``hist_per_tile`` is (L, m); the paper scans H (m, L) in bucket-major
-    (row-vectorized) order, so we scan the transpose, flattened.
-    Returns G with shape (L, m): global base for (tile l, bucket b).
-    """
-    h_t = hist_per_tile.T                                  # (m, L) bucket-major
-    flat = h_t.reshape(-1)
-    g = jnp.concatenate([jnp.zeros((1,), flat.dtype), jnp.cumsum(flat)[:-1]])
-    return g.reshape(h_t.shape).T                          # back to (L, m)
-
-
 def postscan_positions(ids_tiled: Array, g: Array, num_buckets: int) -> Array:
-    """Local stage 2: per-element final destination, eq. (2). (L, T) -> (L, T)."""
+    """Local stage 2 (unfused form): per-element destination, eq. (2)."""
 
     def one_tile(ids, g_tile):
         local, _ = tile_local_offsets(ids, num_buckets)
@@ -135,6 +107,10 @@ def postscan_positions(ids_tiled: Array, g: Array, num_buckets: int) -> Array:
 
     return jax.vmap(one_tile)(ids_tiled, g)
 
+
+# ---------------------------------------------------------------------------
+# The multisplit entry point: resolve a plan, run it
+# ---------------------------------------------------------------------------
 
 def multisplit(
     keys: Array,
@@ -145,6 +121,7 @@ def multisplit(
     tile: Optional[int] = None,
     use_pallas: bool = False,
     interpret: bool = True,
+    backend: Optional[str] = None,
 ) -> MultisplitResult:
     """Stable multisplit of ``keys`` (and optional ``values``) into buckets.
 
@@ -153,9 +130,37 @@ def multisplit(
     (paper §4.7: the reorder changes data movement, not the result); they
     differ in the width L of the global scan and in scatter contiguity.
 
-    ``use_pallas`` routes the tile direct solve through the Pallas TPU
-    kernels in ``repro.kernels`` (interpret mode on CPU).
+    ``backend`` (overrides ``use_pallas``/``interpret``): "reference",
+    "vmap", "pallas-interpret", or "pallas" — see :mod:`repro.core.plan`.
     """
+    plan = make_plan(
+        keys.shape[0],
+        bucket_fn.num_buckets,
+        method=method,
+        key_value=values is not None,
+        backend=resolve_backend(use_pallas, interpret, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+    )
+    return plan(keys, values)
+
+
+# ---------------------------------------------------------------------------
+# Legacy three-pass pipeline — benchmark baseline ONLY (DESIGN.md §6).
+# The postscan/reorder work here evaluates the one-hot/cumsum up to three
+# times per tile (positions, key reorder, value reorder); kept verbatim so
+# benchmarks/bench_multisplit.py can measure what the fused plan removed.
+# ---------------------------------------------------------------------------
+
+def multisplit_unfused(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    tile: Optional[int] = None,
+) -> MultisplitResult:
+    """Pre-plan host orchestration (3 one-hot/cumsum passes per tile)."""
     if method not in ("dms", "wms", "bms"):
         raise ValueError(f"unknown multisplit method {method!r}")
     if tile is None:
@@ -164,39 +169,17 @@ def multisplit(
     n = keys.shape[0]
 
     ids = bucket_fn(keys)
-    # Pad the tail tile with bucket m-1 sentinels: they land at the very end
-    # of the output (stability keeps real m-1 keys ahead of pads? no — pads
-    # come AFTER all real elements of bucket m-1 only if appended last, which
-    # they are: tiles are processed in order and pads sit in the final tile's
-    # tail). We slice them off before returning.
     ids_p, _ = _pad_to_tiles(ids, tile, m - 1)
     n_total = ids_p.shape[0]
     ids_tiled = ids_p.reshape(-1, tile)
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        hist = kops.tile_histograms(ids_tiled, m, interpret=interpret)
-    else:
-        hist = prescan(ids_tiled, m)
-
+    hist = prescan(ids_tiled, m)
     g = global_scan(hist)
-
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        pos_tiled = kops.tile_positions(ids_tiled, g, m, interpret=interpret)
-    else:
-        pos_tiled = postscan_positions(ids_tiled, g, m)
-
+    pos_tiled = postscan_positions(ids_tiled, g, m)          # pass 1
     perm_full = pos_tiled.reshape(-1)
 
     if method in ("wms", "bms"):
-        # Tile-local reorder (paper §4.7): stable bucket-major sort *within*
-        # each tile before the global scatter. Final result identical; on
-        # TPU the scatter then moves per-bucket-contiguous runs (coalesced
-        # DMA / single-segment ragged all-to-all — DESIGN.md §2).
-        def reorder_tile(ids_t, keys_t, pos_t):
+        def reorder_tile(ids_t, keys_t, pos_t):              # pass 2
             local, h = tile_local_offsets(ids_t, m)
             starts = jnp.concatenate(
                 [jnp.zeros((1,), jnp.int32), jnp.cumsum(h)[:-1].astype(jnp.int32)]
@@ -215,7 +198,7 @@ def multisplit(
             vals_p, _ = _pad_to_tiles(values, tile, 0)
             vals_tiled = vals_p.reshape(-1, tile)
 
-            def reorder_vals(ids_t, vals_t):
+            def reorder_vals(ids_t, vals_t):                 # pass 3
                 local, h = tile_local_offsets(ids_t, m)
                 starts = jnp.concatenate(
                     [jnp.zeros((1,), jnp.int32), jnp.cumsum(h)[:-1].astype(jnp.int32)]
@@ -243,7 +226,6 @@ def multisplit(
         )
 
     counts = hist.sum(axis=0).astype(jnp.int32)
-    # Remove padded sentinels from the last bucket's count.
     counts = counts.at[m - 1].add(n - n_total)
     starts = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]

@@ -1,0 +1,471 @@
+"""MultisplitPlan: the one execution engine behind every multisplit consumer.
+
+The paper's model (§4.1) is {local prescan} -> {one global scan} ->
+{local postscan + scatter}. Historically each consumer (``core.multisplit``,
+``core.sort``, ``core.distributed``) re-assembled that pipeline by hand and
+the host orchestration re-evaluated the per-tile one-hot/cumsum up to three
+times (postscan positions, key reorder, value reorder). The plan layer makes
+"one fused VMEM pass per tile" the architecture (DESIGN.md §3):
+
+* :func:`make_plan` resolves ``(n, m, method, key-only/key-value, backend)``
+  into a :class:`MultisplitPlan` — a staged pipeline whose postscan stage is
+  a SINGLE fused evaluation per tile (kernel or jnp), and whose tile size
+  (paper Table 1's subproblem-size knob) comes from a per-shape
+  heuristic/autotune cache owned by this module.
+* backends: ``reference`` (O(n·m) direct eq. (1) eval), ``vmap`` (tiled jnp,
+  fused per-tile closure), ``pallas-interpret`` (Pallas kernels interpreted
+  on CPU), ``pallas`` (compiled for TPU).
+* radix plans (:func:`make_radix_plan`) fuse digit extraction into the
+  kernels: ``radix_sort(use_pallas=True)`` never materializes a label array
+  in HBM — exactly the §3.4 RB-sort overhead the paper's multisplit avoids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.identifiers import BucketIdentifier
+from repro.kernels.common import pad_lanes as _pad_lanes
+
+Array = jnp.ndarray
+
+BACKENDS = ("reference", "vmap", "pallas-interpret", "pallas")
+
+# Tile sizes: "warp" tiles vs "block" tiles (paper Table 1 sizing knob —
+# larger subproblem => narrower global scan matrix H, heavier local solve).
+WMS_TILE = 1024
+BMS_TILE = 4096
+
+# VMEM budget for the heuristic (f32 working set of the fused postscan:
+# one-hot (T·m̄) + tril/permutation (T·T) + two reorder operands).
+_VMEM_BUDGET_BYTES = 8 << 20
+_MIN_TILE = 256
+
+
+class MultisplitResult(NamedTuple):
+    keys: Array                    # permuted keys, bucket-major, stable
+    values: Optional[Array]        # permuted values (None for key-only)
+    bucket_starts: Array           # (m,) start index of each bucket
+    bucket_counts: Array           # (m,) histogram
+    permutation: Array             # (n,) dest position of input element i
+
+
+def resolve_backend(
+    use_pallas: bool = False, interpret: bool = True, backend: Optional[str] = None
+) -> str:
+    """Map the legacy ``(use_pallas, interpret)`` knobs onto a backend name."""
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        return backend
+    if not use_pallas:
+        return "vmap"
+    return "pallas-interpret" if interpret else "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Tile sizing: per-shape heuristic + small autotune cache (paper Table 1)
+# ---------------------------------------------------------------------------
+
+_TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
+
+
+def _heuristic_tile(n: int, m: int, method: str, backend: str) -> int:
+    base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
+    tile = base
+    if backend.startswith("pallas"):
+        m_pad = _pad_lanes(m)
+        # fused postscan working set, f32 words
+        cost = lambda t: 4 * (3 * t * m_pad + t * t)
+        while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
+            tile //= 2
+    if n < tile:
+        # tiny input: one tile, padded to the next power of two (>= 128 lanes)
+        tile = max(128, 1 << max(n - 1, 0).bit_length())
+    return tile
+
+
+def resolve_tile(
+    n: int, m: int, method: str, key_value: bool, backend: str, requested: Optional[int] = None
+) -> int:
+    """Tile height for one subproblem; cached per shape, overridable."""
+    if requested is not None:
+        return requested
+    key = (n, m, method, key_value, backend)
+    tile = _TILE_CACHE.get(key)
+    if tile is None:
+        tile = _heuristic_tile(n, m, method, backend)
+        _TILE_CACHE[key] = tile
+    return tile
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+
+
+def autotune_tile(
+    n: int,
+    bucket_fn: BucketIdentifier,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    candidates: Tuple[int, ...] = (256, 512, 1024, 2048, 4096),
+    trials: int = 3,
+    seed: int = 0,
+) -> int:
+    """Time the candidate tile sizes on synthetic uniform keys and pin the
+    winner in the per-shape cache. Returns the chosen tile."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    keys = jnp.asarray(rng.randint(0, 2**30, n, dtype=np.uint32))
+    values = jnp.arange(n, dtype=jnp.int32) if key_value else None
+    best, best_t = None, None
+    for tile in candidates:
+        if tile > max(n, _MIN_TILE):
+            continue
+        plan = make_plan(
+            n, bucket_fn.num_buckets, method=method, key_value=key_value,
+            backend=backend, tile=tile, bucket_fn=bucket_fn,
+        )
+        run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
+            lambda k: plan(k).keys
+        )
+        args = (keys, values) if key_value else (keys,)
+        jax.block_until_ready(run(*args))                    # compile
+        ts = []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(*args))
+            ts.append(time.perf_counter() - t0)
+        t = min(ts)
+        if best is None or t < best:
+            best, best_t = t, tile
+    if best_t is not None:
+        _TILE_CACHE[(n, bucket_fn.num_buckets, method, key_value, backend)] = best_t
+    return best_t if best_t is not None else resolve_tile(
+        n, bucket_fn.num_buckets, method, key_value, backend
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared tiling / scan helpers (the ONE global operation lives here)
+# ---------------------------------------------------------------------------
+
+def pad_to_tiles(x: Array, tile: int, fill) -> Tuple[Array, int]:
+    n = x.shape[0]
+    n_pad = (-n) % tile
+    if n_pad:
+        x = jnp.concatenate([x, jnp.full((n_pad,) + x.shape[1:], fill, x.dtype)])
+    return x, n_pad
+
+
+def global_scan(hist_per_tile: Array) -> Array:
+    """Exclusive scan over the row-vectorized (bucket-major) H (paper §4.1).
+
+    ``hist_per_tile`` is (L, m); returns G (L, m): global base of
+    (tile l, bucket b).
+    """
+    h_t = hist_per_tile.T                                  # (m, L) bucket-major
+    flat = h_t.reshape(-1)
+    g = jnp.concatenate([jnp.zeros((1,), flat.dtype), jnp.cumsum(flat)[:-1]])
+    return g.reshape(h_t.shape).T                          # back to (L, m)
+
+
+def tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
+    """One one-hot/cumsum evaluation over one tile: (stable in-bucket rank,
+    tile histogram) — paper Alg. 3 without ballots. Canonical definition;
+    ``core.multisplit`` re-exports it."""
+    one_hot = (ids[:, None] == jnp.arange(m)[None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=0)
+    local = incl[jnp.arange(ids.shape[0]), ids] - 1
+    return local.astype(jnp.int32), incl[-1]
+
+
+_tile_local_offsets = tile_local_offsets
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultisplitPlan:
+    """A resolved multisplit pipeline for one problem shape.
+
+    Frozen and hashable-by-identity: build via :func:`make_plan` /
+    :func:`make_radix_plan`, call with concrete arrays. ``radix`` carries the
+    (shift, bits) of a fused digit identifier — when set with a pallas
+    backend, bucket ids are extracted inside the kernels and never exist as a
+    host/HBM array.
+    """
+
+    n: int
+    num_buckets: int
+    method: str                     # dms | wms | bms
+    key_value: bool
+    backend: str
+    tile: int
+    radix: Optional[Tuple[int, int]] = None        # (shift, bits)
+    bucket_fn: Optional[BucketIdentifier] = None
+
+    # -- introspection -----------------------------------------------------
+    def stages(self) -> Tuple[str, ...]:
+        """Human/test-readable pipeline description."""
+        kernel = self.backend.startswith("pallas")
+        fused_id = self.radix is not None and kernel
+        pre = ("prescan:radix-fused-kernel" if fused_id
+               else "prescan:kernel" if kernel else "prescan:vmap")
+        if self.method == "dms":
+            post = ("postscan:radix-positions-kernel" if fused_id
+                    else "postscan:positions-kernel" if kernel else "postscan:positions-vmap")
+        else:
+            post = ("postscan:radix-fused-reorder-kernel" if fused_id
+                    else "postscan:fused-reorder-kernel" if kernel
+                    else "postscan:fused-reorder-vmap")
+        if self.backend == "reference":
+            return ("direct-solve:reference",)
+        return (pre, "scan:global", post, "scatter:bucket-major")
+
+    # -- helpers -----------------------------------------------------------
+    def _interpret(self) -> bool:
+        return self.backend != "pallas"
+
+    def _ids_fn(self) -> BucketIdentifier:
+        if self.bucket_fn is not None:
+            return self.bucket_fn
+        if self.radix is None:
+            raise ValueError("plan has neither bucket_fn nor radix spec")
+        shift, bits = self.radix
+        mask = (1 << bits) - 1
+        return BucketIdentifier(
+            lambda u: ((u.astype(jnp.uint32) >> jnp.uint32(shift)) & jnp.uint32(mask)).astype(jnp.int32),
+            1 << bits,
+            name=f"radix[{shift}:{shift + bits}]",
+        )
+
+    # -- stage 1: prescan --------------------------------------------------
+    def prescan(self, keys_tiled: Array, ids_tiled: Optional[Array]) -> Array:
+        m = self.num_buckets
+        if self.backend.startswith("pallas"):
+            from repro.kernels import ops as kops
+
+            if self.radix is not None:
+                shift, bits = self.radix
+                return kops.radix_tile_histograms(
+                    keys_tiled, shift, bits, interpret=self._interpret()
+                )
+            return kops.tile_histograms(ids_tiled, m, interpret=self._interpret())
+        return jax.vmap(lambda t: _tile_local_offsets(t, m)[1])(ids_tiled)
+
+    # -- stage 3: fused postscan (+ reorder for wms/bms) -------------------
+    def postscan(
+        self,
+        g: Array,
+        keys_tiled: Array,
+        ids_tiled: Optional[Array],
+        vals_tiled: Optional[Array],
+    ) -> Tuple[Array, Optional[Array], Array, Array]:
+        """Returns (scatter_src_keys, scatter_src_vals, scatter_pos, perm).
+
+        For wms/bms the sources are bucket-major within each tile and the
+        positions permuted to match — ONE one-hot/cumsum evaluation per tile
+        (the fused kernel / fused closure is the only postscan entry point).
+        ``perm`` is the element-ordered destination map (paper eq. (2)), a
+        free byproduct of the same evaluation.
+        """
+        m = self.num_buckets
+        pallas = self.backend.startswith("pallas")
+        if self.method == "dms":
+            if pallas:
+                from repro.kernels import ops as kops
+
+                if self.radix is not None:
+                    shift, bits = self.radix
+                    pos = kops.radix_tile_positions(
+                        keys_tiled, g, shift, bits, interpret=self._interpret()
+                    )
+                else:
+                    pos = kops.tile_positions(ids_tiled, g, m, interpret=self._interpret())
+            else:
+                def one_tile(ids, g_tile):
+                    local, _ = _tile_local_offsets(ids, m)
+                    return g_tile[ids] + local
+
+                pos = jax.vmap(one_tile)(ids_tiled, g)
+            return keys_tiled, vals_tiled, pos, pos
+
+        if pallas:
+            from repro.kernels import ops as kops
+
+            if self.radix is not None:
+                shift, bits = self.radix
+                return kops.radix_fused_postscan_reorder(
+                    keys_tiled, g, vals_tiled, shift, bits, interpret=self._interpret()
+                )
+            return kops.fused_postscan_reorder(
+                ids_tiled, g, keys_tiled, vals_tiled, m, interpret=self._interpret()
+            )
+
+        # vmap backend: the SAME fusion as the kernel — local ranks, tile
+        # starts, tile destination and global destination all from one
+        # one-hot/cumsum evaluation, then one gather-free scatter per array.
+        def fused_tile(ids, g_tile, keys_t, vals_t):
+            local, hist = _tile_local_offsets(ids, m)
+            starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+            dest = starts[ids] + local
+            pos = (g_tile[ids] + local).astype(jnp.int32)
+            keys_r = jnp.zeros_like(keys_t).at[dest].set(keys_t)
+            pos_r = jnp.zeros_like(pos).at[dest].set(pos)
+            if vals_t is None:
+                return keys_r, pos_r, pos
+            vals_r = jnp.zeros_like(vals_t).at[dest].set(vals_t)
+            return keys_r, vals_r, pos_r, pos
+
+        if vals_tiled is None:
+            keys_r, pos_r, perm = jax.vmap(lambda i, gt, kt: fused_tile(i, gt, kt, None))(
+                ids_tiled, g, keys_tiled
+            )
+            return keys_r, None, pos_r, perm
+        keys_r, vals_r, pos_r, perm = jax.vmap(fused_tile)(ids_tiled, g, keys_tiled, vals_tiled)
+        return keys_r, vals_r, pos_r, perm
+
+    # -- full pipeline -----------------------------------------------------
+    def __call__(self, keys: Array, values: Optional[Array] = None) -> MultisplitResult:
+        if (values is not None) != self.key_value:
+            raise ValueError(
+                f"plan resolved for key_value={self.key_value} but called with "
+                f"values={'present' if values is not None else 'absent'}"
+            )
+        if keys.shape[0] != self.n:
+            raise ValueError(f"plan resolved for n={self.n}, got n={keys.shape[0]}")
+        m = self.num_buckets
+
+        if self.backend == "reference":
+            return _direct_solve_reference(keys, self._ids_fn(), values)
+
+        if self.backend.startswith("pallas") and keys.dtype.itemsize != 4:
+            raise ValueError(
+                f"pallas backends require 32-bit keys (got {keys.dtype}); "
+                "use backend='vmap' for other widths"
+            )
+
+        fused_id = self.radix is not None and self.backend.startswith("pallas")
+        n = self.n
+
+        # ---- tiling. Pads ride in bucket m-1 at the very tail, so they land
+        # after every real element and are sliced off below. For fused radix
+        # plans the pad key is all-ones: its digit is m-1 in EVERY pass.
+        if fused_id:
+            pad_key = (1 << 32) - 1 if keys.dtype == jnp.uint32 else -1
+            keys_p, _ = pad_to_tiles(keys, self.tile, pad_key)
+            keys_tiled = keys_p.reshape(-1, self.tile)
+            ids_tiled = None
+        else:
+            ids = self._ids_fn()(keys)
+            ids_p, _ = pad_to_tiles(ids, self.tile, m - 1)
+            ids_tiled = ids_p.reshape(-1, self.tile)
+            keys_p, _ = pad_to_tiles(keys, self.tile, 0)
+            keys_tiled = keys_p.reshape(-1, self.tile)
+        n_total = keys_tiled.size
+        vals_tiled = None
+        if values is not None:
+            vals_p, _ = pad_to_tiles(values, self.tile, 0)
+            vals_tiled = vals_p.reshape(-1, self.tile)
+
+        # ---- the three stages
+        hist = self.prescan(keys_tiled, ids_tiled)
+        g = global_scan(hist)
+        src_keys, src_vals, pos, perm_tiled = self.postscan(g, keys_tiled, ids_tiled, vals_tiled)
+
+        # ---- global scatter (contiguous per-bucket runs for wms/bms)
+        scatter_pos = pos.reshape(-1)
+        keys_out = (
+            jnp.zeros((n_total,), keys.dtype).at[scatter_pos].set(src_keys.reshape(-1))[:n]
+        )
+        values_out = None
+        if values is not None:
+            values_out = (
+                jnp.zeros((n_total,) + values.shape[1:], values.dtype)
+                .at[scatter_pos]
+                .set(src_vals.reshape(-1))[:n]
+            )
+
+        counts = hist.sum(axis=0).astype(jnp.int32)
+        counts = counts.at[m - 1].add(n - n_total)           # drop pad sentinels
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+        )
+        return MultisplitResult(
+            keys_out, values_out, starts, counts, perm_tiled.reshape(-1)[:n]
+        )
+
+
+def _direct_solve_reference(
+    keys: Array, bucket_fn: BucketIdentifier, values: Optional[Array]
+) -> MultisplitResult:
+    """O(n·m) direct evaluation of paper eq. (1): the oracle backend."""
+    m = bucket_fn.num_buckets
+    ids = bucket_fn(keys)
+    local, hist = _tile_local_offsets(ids, m)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)]
+    )
+    perm = starts[ids] + local
+    keys_out = jnp.zeros_like(keys).at[perm].set(keys)
+    values_out = None
+    if values is not None:
+        values_out = jnp.zeros_like(values).at[perm].set(values)
+    return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
+
+
+def make_plan(
+    n: int,
+    num_buckets: int,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    bucket_fn: Optional[BucketIdentifier] = None,
+) -> MultisplitPlan:
+    """Resolve (n, m, method, key-value-ness, backend) into a staged plan."""
+    if method not in ("dms", "wms", "bms"):
+        raise ValueError(f"unknown multisplit method {method!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    resolved_tile = resolve_tile(n, num_buckets, method, key_value, backend, tile)
+    return MultisplitPlan(
+        n=n, num_buckets=num_buckets, method=method, key_value=key_value,
+        backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
+    )
+
+
+def make_radix_plan(
+    n: int,
+    shift: int,
+    bits: int,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+) -> MultisplitPlan:
+    """A plan whose bucket identifier is the radix digit (shift, bits) —
+    fused into the kernels on pallas backends (no label array in HBM)."""
+    if method not in ("dms", "wms", "bms"):
+        raise ValueError(f"unknown multisplit method {method!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    m = 1 << bits
+    resolved_tile = resolve_tile(n, m, method, key_value, backend, tile)
+    return MultisplitPlan(
+        n=n, num_buckets=m, method=method, key_value=key_value,
+        backend=backend, tile=resolved_tile, radix=(shift, bits),
+    )

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier, radix_buckets
+from repro.core.plan import make_radix_plan, resolve_backend
 
 Array = jnp.ndarray
 
@@ -34,25 +35,36 @@ def radix_sort(
     key_bits: int = 32,
     method: str = "bms",
     use_pallas: bool = False,
+    interpret: bool = True,
+    backend: Optional[str] = None,
+    tile: Optional[int] = None,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort uint32 keys with ⌈key_bits/radix_bits⌉ multisplit passes (§7.1).
 
     Stable. ``radix_bits=8`` means each pass is a 256-bucket multisplit —
     the paper's large-m regime; Table 8 sweeps r in [4, 8].
+
+    Every pass runs through a radix :class:`~repro.core.plan.MultisplitPlan`:
+    on pallas backends the digit ``f_k(u) = (u >> k·r) & (2^r − 1)`` is
+    extracted INSIDE the fused kernels, so no label array is ever
+    materialized host-side — the §3.4 RB-sort overhead the paper's
+    multisplit-sort avoids (DESIGN.md §5).
     """
+    resolved = resolve_backend(use_pallas, interpret, backend)
     n_pass = math.ceil(key_bits / radix_bits)
     for k in range(n_pass):
         # Final pass may cover fewer bits (e.g. r=7: 4 passes of 7 + one of 4).
         bits = min(radix_bits, key_bits - k * radix_bits)
-        shift, mask = k * radix_bits, (1 << bits) - 1
-        bf = BucketIdentifier(
-            lambda u, s=shift, msk=mask: (
-                (u.astype(jnp.uint32) >> jnp.uint32(s)) & jnp.uint32(msk)
-            ).astype(jnp.int32),
-            1 << bits,
-            name=f"radix-pass{k}",
+        plan = make_radix_plan(
+            keys.shape[0],
+            k * radix_bits,
+            bits,
+            method=method,
+            key_value=values is not None,
+            backend=resolved,
+            tile=tile,
         )
-        res = ms.multisplit(keys, bf, values, method=method, use_pallas=use_pallas)
+        res = plan(keys, values)
         keys = res.keys
         values = res.values
     return keys, values

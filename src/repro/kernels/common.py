@@ -1,0 +1,105 @@
+"""Shared building blocks for the multisplit Pallas kernels (DESIGN.md §4).
+
+Every kernel in this package is built from the same four VMEM-resident
+primitives, so they live in one module instead of being re-derived per file:
+
+* :func:`one_hot_f32`   — the paper's binary matrix ``H̄`` (§4.5) built with a
+  broadcasted iota compare (no gather, VPU-friendly).
+* :func:`cumsum_mxu`    — inclusive column scan as a lower-triangular ones
+  matmul: maps the warp-scan of paper Alg. 3 onto the MXU systolic array.
+* :func:`exclusive_starts_mxu` — exclusive scan of a histogram row via a
+  *strictly* lower-triangular matmul (bucket start offsets).
+* :func:`permute_matmul_32` — apply a within-tile permutation to 32-bit words
+  as TWO half-word one-hot matmuls (16-bit halves keep fp32 accumulation
+  exact) — MXU work instead of a serialized scatter (paper §4.7 reorder).
+
+All integer payloads are carried through fp32 matmuls in exact range
+(< 2^24 per half-word / count), which every kernel test checks bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def pad_lanes(m: int) -> int:
+    """Pad the bucket axis to a multiple of 128 lanes (min one full lane)."""
+    return max(128, ((m + 127) // 128) * 128)
+
+
+def one_hot_f32(ids: Array, m_pad: int) -> Array:
+    """(T,) int32 -> (T, m_pad) f32 one-hot via broadcasted iota (no gather)."""
+    t = ids.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, m_pad), 1)
+    return (cols == ids[:, None]).astype(jnp.float32)
+
+
+def cumsum_mxu(x: Array) -> Array:
+    """Inclusive column cumsum as a lower-triangular matmul (MXU-native)."""
+    t = x.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    tril = (rows >= cols).astype(jnp.float32)
+    return jax.lax.dot(tril, x, precision=jax.lax.Precision.HIGHEST)
+
+
+def exclusive_starts_mxu(hist: Array) -> Array:
+    """(m,) f32 histogram -> (m,) exclusive prefix (bucket start offsets)."""
+    m = hist.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    strict_tril = (rows > cols).astype(jnp.float32)
+    return jax.lax.dot(strict_tril, hist[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+
+
+def permutation_matrix(dest: Array) -> Array:
+    """(T,) int32 destinations -> (T, T) f32 P with P[j, i] = (dest_i == j)."""
+    t = dest.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    return (rows == dest[None, :]).astype(jnp.float32)
+
+
+def fused_postscan_body(ids, g_row, keys, vals, m_pad: int):
+    """THE fused postscan+reorder math, shared by the generic and radix
+    kernels (they differ only in where ``ids`` comes from): ONE
+    one-hot/cumsum evaluation yields local ranks, the tile histogram and
+    bucket starts, the within-tile destination, the global destination
+    (paper eq. (2)), and the bucket-major permutation of keys/values/
+    positions. Returns (keys_r, vals_r_or_None, pos_r, gpos)."""
+    t = ids.shape[0]
+    one_hot = one_hot_f32(ids, m_pad)                       # THE one-hot (T, m)
+    incl = cumsum_mxu(one_hot)                              # THE cumsum
+    local = ((incl - 1.0) * one_hot).sum(axis=1)            # (T,) in-bucket rank
+    hist = incl[t - 1, :]                                   # (m,) tile histogram
+    starts = exclusive_starts_mxu(hist)                     # (m,) tile bucket starts
+    pick = lambda row: jax.lax.dot(
+        one_hot, row[:, None], precision=jax.lax.Precision.HIGHEST
+    )[:, 0]
+    dest = (pick(starts) + local).astype(jnp.int32)         # within-tile destination
+    gpos = (pick(g_row.astype(jnp.float32)) + local).astype(jnp.int32)  # eq. (2)
+    perm = permutation_matrix(dest)
+    keys_r = permute_matmul_32(perm, keys)
+    pos_r = permute_matmul_32(perm, gpos)
+    vals_r = permute_matmul_32(perm, vals) if vals is not None else None
+    return keys_r, vals_r, pos_r, gpos
+
+
+def permute_matmul_32(perm: Array, x: Array) -> Array:
+    """Permute a (T,) vector of 32-bit words by the (T, T) matrix ``perm``.
+
+    Bitcasts to uint32 (exact for int32/uint32/float32 payloads), splits into
+    16-bit halves so the fp32 MXU accumulation is exact, permutes both halves
+    in one matmul, and reassembles.
+    """
+    xi = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    halves = jnp.stack(
+        [(xi & jnp.uint32(0xFFFF)).astype(jnp.float32),
+         (xi >> jnp.uint32(16)).astype(jnp.float32)], axis=1
+    )                                                       # (T, 2)
+    moved = jax.lax.dot(perm, halves, precision=jax.lax.Precision.HIGHEST)
+    lo = moved[:, 0].astype(jnp.uint32)
+    hi = moved[:, 1].astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(lo | (hi << jnp.uint32(16)), x.dtype)

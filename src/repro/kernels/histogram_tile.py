@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.multisplit_tile import _one_hot, _pad_lanes
+from repro.kernels.common import one_hot_f32 as _one_hot, pad_lanes as _pad_lanes
 
 Array = jnp.ndarray
 

@@ -2,50 +2,49 @@
 
 One grid program processes one tile (the paper's subproblem): a VMEM-resident
 strip of bucket ids. The GPU ballot/popc machinery is replaced by a one-hot
-matrix in VMEM reduced/scanned with MXU-friendly dense ops (DESIGN.md §2):
+matrix in VMEM reduced/scanned with MXU-friendly dense ops (DESIGN.md §2);
+the shared primitives live in :mod:`repro.kernels.common`.
 
-* histogram  = column-sum of the one-hot matrix H̄      (paper Alg. 2)
-* local rank = exclusive column-cumsum of H̄, read out
-               at each element's own bucket             (paper Alg. 3)
-* cumsum is computed as `tril @ H̄` — a lower-triangular ones matmul that
-  maps onto the MXU systolic array instead of a sequential scan.
-* reorder applies the within-tile permutation as TWO half-word one-hot
-  matmuls (keys split into 16-bit halves so fp32 accumulation is exact),
-  again MXU work instead of a serialized scatter (paper §4.7 reorder).
+Kernels:
 
-All kernels use explicit BlockSpecs with VMEM tiling; the bucket axis is
-padded to a multiple of 128 lanes.
+* ``tile_histograms_pallas``       — prescan direct solve (paper Alg. 2).
+* ``tile_positions_pallas``        — postscan for DMS (no reorder): final
+                                     destinations only (paper eq. (2)).
+* ``fused_postscan_reorder_pallas``— THE WMS/BMS postscan (DESIGN.md §4):
+                                     local ranks, global destinations AND the
+                                     within-tile bucket-major reorder of keys,
+                                     values and destinations from a single
+                                     one-hot/cumsum evaluation. This is the
+                                     only postscan/reorder entry point of the
+                                     fused pipeline — it replaces the three
+                                     separate postscan/reorder-keys/
+                                     reorder-values passes of the legacy host
+                                     orchestration.
+* ``tile_reorder_pallas``          — standalone reorder, kept as the unfused
+                                     baseline for kernel tests and the
+                                     fused-vs-legacy benchmark.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import (
+    cumsum_mxu as _cumsum_mxu,
+    exclusive_starts_mxu,
+    fused_postscan_body,
+    one_hot_f32 as _one_hot,
+    pad_lanes as _pad_lanes,
+    permutation_matrix,
+    permute_matmul_32,
+)
+
 Array = jnp.ndarray
-
-
-def _pad_lanes(m: int) -> int:
-    return max(128, ((m + 127) // 128) * 128)
-
-
-def _one_hot(ids: Array, m_pad: int) -> Array:
-    """(T,) int32 -> (T, m_pad) f32 one-hot via broadcasted iota (no gather)."""
-    t = ids.shape[0]
-    cols = jax.lax.broadcasted_iota(jnp.int32, (t, m_pad), 1)
-    return (cols == ids[:, None]).astype(jnp.float32)
-
-
-def _cumsum_mxu(x: Array) -> Array:
-    """Inclusive column cumsum as a lower-triangular matmul (MXU-native)."""
-    t = x.shape[0]
-    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
-    tril = (rows >= cols).astype(jnp.float32)
-    return jax.lax.dot(tril, x, precision=jax.lax.Precision.HIGHEST)
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +73,7 @@ def tile_histograms_pallas(ids_tiled: Array, num_buckets: int, *, interpret: boo
 
 
 # ---------------------------------------------------------------------------
-# Kernel 2: per-tile final positions (the postscan direct solve)
+# Kernel 2: per-tile final positions (the DMS postscan direct solve)
 # ---------------------------------------------------------------------------
 
 def _positions_kernel(ids_ref, g_ref, pos_ref, *, m_pad: int):
@@ -108,7 +107,81 @@ def tile_positions_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Kernel 3: fused tile reorder (WMS/BMS §4.7): local multisplit of the tile
+# Kernel 3 (THE fused WMS/BMS postscan): one one-hot/cumsum evaluation per
+# tile yields local ranks, global destinations, and the bucket-major reorder
+# of keys, values and destinations (paper §4.5 + §4.7 in one VMEM pass).
+# ---------------------------------------------------------------------------
+
+def _fused_postscan_kernel(*refs, m_pad: int, has_values: bool):
+    if has_values:
+        (ids_ref, g_ref, keys_ref, vals_ref,
+         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
+    else:
+        ids_ref, g_ref, keys_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
+        vals_ref = vals_out_ref = None
+
+    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
+        ids_ref[0, :], g_ref[0, :], keys_ref[0, :],
+        vals_ref[0, :] if has_values else None, m_pad,
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos                               # element-ordered perm
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def fused_postscan_reorder_pallas(
+    ids_tiled: Array,
+    g: Array,
+    keys_tiled: Array,
+    values_tiled: Optional[Array],
+    num_buckets: int,
+    *,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Fused postscan+reorder: (L,T) ids, (L,m) bases, (L,T) keys [+values]
+    -> (keys_r, values_r, positions_r, perm), the first three bucket-major
+    within each tile and ``perm`` in original element order.
+
+    ``positions_r[l, j]`` is the GLOBAL destination of the reordered element
+    at tile slot ``j`` — the caller's scatter is the only remaining data
+    movement (contiguous per-bucket runs; paper §4.7 coalescing).
+    ``perm[l, i]`` is the global destination of INPUT element i (eq. (2)) —
+    a free byproduct of the same one-hot/cumsum evaluation.
+    """
+    n_tiles, t = ids_tiled.shape
+    m_pad = _pad_lanes(num_buckets)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :num_buckets].set(g)
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    in_specs = [row, pl.BlockSpec((1, m_pad), lambda i: (i, 0)), row] + ([row] if has_values else [])
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    args = (ids_tiled, g_pad, keys_tiled) + ((values_tiled,) if has_values else ())
+    out = pl.pallas_call(
+        functools.partial(_fused_postscan_kernel, m_pad=m_pad, has_values=has_values),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+# ---------------------------------------------------------------------------
+# Kernel 4: standalone tile reorder — unfused baseline (tests + benchmarks)
 # ---------------------------------------------------------------------------
 
 def _reorder_kernel(ids_ref, keys_ref, vals_ref, keys_out_ref, vals_out_ref, dest_ref, *, m_pad: int):
@@ -118,33 +191,14 @@ def _reorder_kernel(ids_ref, keys_ref, vals_ref, keys_out_ref, vals_out_ref, des
     incl = _cumsum_mxu(one_hot)
     local = ((incl - 1.0) * one_hot).sum(axis=1)            # (T,)
     hist = incl[t - 1, :]                                   # (m,)
-    # exclusive scan of the tile histogram: starts[b] = sum_{b'<b} hist[b']
-    cols = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 1)
-    rows = jax.lax.broadcasted_iota(jnp.int32, (m_pad, m_pad), 0)
-    strict_tril = (rows > cols).astype(jnp.float32)
-    starts = jax.lax.dot(strict_tril, hist[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    starts = exclusive_starts_mxu(hist)
     base = jax.lax.dot(one_hot, starts[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
     dest = (base + local).astype(jnp.int32)                 # within-tile destination
     dest_ref[0, :] = dest
 
-    # Apply the permutation as a one-hot matmul; split 32-bit words into
-    # 16-bit halves so fp32 accumulation is exact.
-    rows_t = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
-    perm = (rows_t == dest[None, :]).astype(jnp.float32)    # perm[j, i] = (dest_i == j)
-
-    def permute32(x):
-        xi = x.astype(jnp.uint32)
-        halves = jnp.stack(
-            [(xi & jnp.uint32(0xFFFF)).astype(jnp.float32),
-             (xi >> jnp.uint32(16)).astype(jnp.float32)], axis=1
-        )                                                   # (T, 2)
-        moved = jax.lax.dot(perm, halves, precision=jax.lax.Precision.HIGHEST)
-        lo = moved[:, 0].astype(jnp.uint32)
-        hi = moved[:, 1].astype(jnp.uint32)
-        return (lo | (hi << jnp.uint32(16))).astype(x.dtype)
-
-    keys_out_ref[0, :] = permute32(keys_ref[0, :])
-    vals_out_ref[0, :] = permute32(vals_ref[0, :])
+    perm = permutation_matrix(dest)
+    keys_out_ref[0, :] = permute_matmul_32(perm, keys_ref[0, :])
+    vals_out_ref[0, :] = permute_matmul_32(perm, vals_ref[0, :])
 
 
 def tile_reorder_pallas(

@@ -44,6 +44,36 @@ def tile_reorder(
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def fused_postscan_reorder(
+    ids_tiled: Array,
+    g: Array,
+    keys_tiled: Array,
+    values_tiled: Optional[Array],
+    num_buckets: int,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE fused WMS/BMS postscan entry point (see multisplit_tile)."""
+    return _mst.fused_postscan_reorder_pallas(
+        ids_tiled, g, keys_tiled, values_tiled, num_buckets, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "interpret"))
+def radix_fused_postscan_reorder(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    shift: int,
+    bits: int,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE fused radix postscan entry point: digits never leave the kernel."""
+    return _radix.radix_fused_postscan_reorder_pallas(
+        keys_tiled, g, values_tiled, shift, bits, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
 def device_histogram(ids_tiled: Array, num_buckets: int, interpret: bool = True) -> Array:
     return _hist.device_histogram_pallas(ids_tiled, num_buckets, interpret=interpret)
 

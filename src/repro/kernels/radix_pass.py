@@ -1,21 +1,34 @@
-"""Fused radix-pass kernel: digit extraction + tile histogram + positions.
+"""Fused radix-pass kernels: digit extraction + histogram + postscan+reorder.
 
 One multisplit-sort pass (paper §7.1) needs the bucket identifier
 ``f_k(u) = (u >> k·r) & (2^r − 1)`` evaluated twice (prescan + postscan).
-Fusing the shift/mask into the kernels avoids materializing the label vector
-in HBM — the exact overhead the paper's RB-sort baseline pays (§3.4) and its
-multisplit avoids.
+Fusing the shift/mask into the kernels means the label vector NEVER exists in
+HBM — the exact overhead the paper's RB-sort baseline pays (§3.4) and its
+multisplit avoids. ``radix_sort(use_pallas=True)`` routes every pass through
+these two kernels (via :mod:`repro.core.plan`):
+
+* ``radix_tile_histograms_pallas``      — prescan: digits + tile histogram.
+* ``radix_fused_postscan_reorder_pallas`` — postscan: digits + local ranks +
+  global destinations + within-tile digit-major reorder of keys (and values)
+  from ONE one-hot/cumsum evaluation (DESIGN.md §4/§5).
+* ``radix_tile_positions_pallas``       — DMS (no-reorder) postscan variant.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.multisplit_tile import _cumsum_mxu, _one_hot, _pad_lanes
+from repro.kernels.common import (
+    cumsum_mxu as _cumsum_mxu,
+    fused_postscan_body,
+    one_hot_f32 as _one_hot,
+    pad_lanes as _pad_lanes,
+)
 
 Array = jnp.ndarray
 
@@ -61,7 +74,7 @@ def _radix_pos_kernel(keys_ref, g_ref, pos_ref, *, shift: int, bits: int, m_pad:
 def radix_tile_positions_pallas(
     keys_tiled: Array, g: Array, shift: int, bits: int, *, interpret: bool = True
 ) -> Array:
-    """Fused postscan for one radix pass: (L, T) keys + (L, m) bases -> (L, T) dests."""
+    """Fused DMS postscan for one radix pass: (L, T) keys + (L, m) bases -> (L, T) dests."""
     n_tiles, t = keys_tiled.shape
     m = 1 << bits
     m_pad = _pad_lanes(m)
@@ -77,3 +90,77 @@ def radix_tile_positions_pallas(
         out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
         interpret=interpret,
     )(keys_tiled, g_pad)
+
+
+# ---------------------------------------------------------------------------
+# Fused WMS/BMS radix postscan: digits + ranks + global dests + reorder in one
+# VMEM pass — no label array, no separate reorder passes (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def _radix_fused_kernel(*refs, shift: int, bits: int, m_pad: int, has_values: bool):
+    if has_values:
+        (keys_ref, g_ref, vals_ref,
+         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
+    else:
+        keys_ref, g_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
+        vals_ref = vals_out_ref = None
+
+    keys = keys_ref[0, :]
+    ids = _digit(keys, shift, bits)                         # fused digit extraction
+    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
+        ids, g_ref[0, :], keys, vals_ref[0, :] if has_values else None, m_pad
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos                               # element-ordered perm
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def radix_fused_postscan_reorder_pallas(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    shift: int,
+    bits: int,
+    *,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """(L,T) keys + (L,m) bases [+ (L,T) values]
+    -> (keys_r, values_r, pos_r, perm).
+
+    Digit-major within each tile; ``pos_r`` holds global destinations so the
+    caller's scatter is the only remaining data movement of the pass, and
+    ``perm`` is the element-ordered destination map (free byproduct).
+    """
+    n_tiles, t = keys_tiled.shape
+    m = 1 << bits
+    m_pad = _pad_lanes(m)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    in_specs = [row, pl.BlockSpec((1, m_pad), lambda i: (i, 0))] + ([row] if has_values else [])
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    args = (keys_tiled, g_pad) + ((values_tiled,) if has_values else ())
+    out = pl.pallas_call(
+        functools.partial(
+            _radix_fused_kernel, shift=shift, bits=bits, m_pad=m_pad, has_values=has_values
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm

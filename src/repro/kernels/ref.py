@@ -60,6 +60,42 @@ def tile_reorder(
     return keys_r, values_r, dest.astype(jnp.int32)
 
 
+def fused_postscan_reorder(
+    ids_tiled: Array,
+    g: Array,
+    keys_tiled: Array,
+    values_tiled: Optional[Array],
+    num_buckets: int,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Oracle for the fused postscan+reorder kernel: the composition of
+    ``tile_positions`` (global destinations) and ``tile_reorder`` applied to
+    keys, values AND the destination vector; the element-ordered destination
+    map rides along as the fourth output."""
+    pos = tile_positions(ids_tiled, g, num_buckets)
+    keys_r, values_r, dest = tile_reorder(ids_tiled, keys_tiled, values_tiled, num_buckets)
+
+    def scatter_row(dest_row, x_row):
+        return jnp.zeros_like(x_row).at[dest_row].set(x_row)
+
+    pos_r = jax.vmap(scatter_row)(dest, pos)
+    return keys_r, values_r, pos_r.astype(jnp.int32), pos.astype(jnp.int32)
+
+
+def radix_fused_postscan_reorder(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    shift: int,
+    bits: int,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Oracle for the fused radix postscan: digit extraction + fused reorder."""
+    ids = (
+        (keys_tiled.astype(jnp.uint32) >> jnp.uint32(shift))
+        & jnp.uint32((1 << bits) - 1)
+    ).astype(jnp.int32)
+    return fused_postscan_reorder(ids, g, keys_tiled, values_tiled, 1 << bits)
+
+
 def device_histogram(ids_tiled: Array, num_buckets: int) -> Array:
     """(L, T) ids -> (m,) global histogram (paper §7.3, atomic-free)."""
     return tile_histograms(ids_tiled, num_buckets).sum(axis=0)

@@ -46,6 +46,42 @@ def test_tile_reorder(L, T, m, kdtype):
 
 
 @pytest.mark.parametrize("L,T,m", SWEEP)
+@pytest.mark.parametrize("key_value", [False, True])
+def test_fused_postscan_reorder(L, T, m, key_value):
+    """THE fused kernel == composition of positions + reorder oracles."""
+    rng = np.random.RandomState(L * T + m)
+    ids = jnp.asarray(rng.randint(0, m, (L, T), dtype=np.int32))
+    keys = jnp.asarray(rng.randint(0, 2**31 - 1, (L, T)).astype(np.uint32))
+    vals = jnp.asarray(rng.randint(0, 2**31 - 1, (L, T), dtype=np.int32)) if key_value else None
+    g = jnp.asarray(rng.randint(0, 100000, (L, m), dtype=np.int32))
+    kk, vk, pk, permk = ops.fused_postscan_reorder(ids, g, keys, vals, m)
+    kr, vr, pr, permr = ref.fused_postscan_reorder(ids, g, keys, vals, m)
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(permk), np.asarray(permr))
+    if key_value:
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+
+@pytest.mark.parametrize("shift,bits", [(0, 8), (8, 8), (28, 4), (12, 6)])
+@pytest.mark.parametrize("key_value", [False, True])
+def test_radix_fused_postscan_reorder(shift, bits, key_value):
+    """Fused radix postscan: in-kernel digits == host digits + fused oracle."""
+    rng = np.random.RandomState(shift * 31 + bits)
+    keys = jnp.asarray(rng.randint(0, 2**31 - 1, (3, 256)).astype(np.uint32))
+    vals = jnp.asarray(rng.randint(0, 2**31 - 1, (3, 256), dtype=np.int32)) if key_value else None
+    m = 1 << bits
+    g = jnp.asarray(rng.randint(0, 10000, (3, m), dtype=np.int32))
+    kk, vk, pk, permk = ops.radix_fused_postscan_reorder(keys, g, vals, shift, bits)
+    kr, vr, pr, permr = ref.radix_fused_postscan_reorder(keys, g, vals, shift, bits)
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(permk), np.asarray(permr))
+    if key_value:
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+
+
+@pytest.mark.parametrize("L,T,m", SWEEP)
 def test_device_histogram(L, T, m):
     ids = jnp.asarray(np.random.RandomState(7).randint(0, m, (L, T), dtype=np.int32))
     np.testing.assert_array_equal(

@@ -30,6 +30,22 @@ def test_property_radix_sort(data):
     np.testing.assert_array_equal(np.asarray(ks), np.sort(keys))
 
 
+@pytest.mark.parametrize("radix_bits", [4, 8])
+@pytest.mark.parametrize("method", ["dms", "bms"])
+def test_radix_sort_fused_pallas(radix_bits, method):
+    """The fused in-kernel digit path (no host labels) vs numpy stable sort."""
+    rng = np.random.RandomState(radix_bits + 100)
+    keys = rng.randint(0, 2**32, size=3000, dtype=np.uint32)
+    vals = np.arange(3000, dtype=np.int32)
+    ks, vs = radix_sort(
+        jnp.asarray(keys), jnp.asarray(vals),
+        radix_bits=radix_bits, method=method, use_pallas=True, tile=512,
+    )
+    order = np.argsort(keys, kind="stable")
+    np.testing.assert_array_equal(np.asarray(ks), keys[order])
+    np.testing.assert_array_equal(np.asarray(vs), vals[order])
+
+
 def test_rb_sort_baseline_matches_multisplit():
     rng = np.random.RandomState(0)
     keys = jnp.asarray(rng.randint(0, 2**30, 4096, dtype=np.uint32))
