@@ -22,7 +22,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import bench, row
 from repro.core.identifiers import delta_buckets
-from repro.core.multisplit import multisplit, multisplit_unfused
+from repro.core.multisplit import (
+    batched_multisplit,
+    multisplit,
+    multisplit_unfused,
+    segmented_multisplit,
+)
 from repro.core.sort import direct_sort_multisplit, rb_sort_multisplit
 
 N = 1 << int(os.environ.get("MS_BENCH_N", "18"))
@@ -122,11 +127,86 @@ def run_fused_vs_legacy(emit_json: bool = True):
     return results
 
 
+def run_batched_vs_host_loop(emit_json: bool = True):
+    """DESIGN.md §9 measurement: b independent multisplits as ONE batched
+    (and one segmented) plan launch vs the host loop every consumer used to
+    write (one flat plan call per row). Appends a trajectory point to
+    BENCH_multisplit.json; the acceptance bar is batched >= 1.5x host-loop
+    on the vmap backend at b=64, n=4096, m=32."""
+    b = int(os.environ.get("MS_BENCH_B", "64"))
+    n = 1 << int(os.environ.get("MS_BENCH_BN", "12"))        # 4096 per row
+    m = 32
+    bf = delta_buckets(m, 2**30)
+    rng = np.random.RandomState(0)
+    keys2d = jnp.asarray(rng.randint(0, 2**30, (b, n), dtype=np.uint32))
+    vals2d = jnp.asarray(rng.randint(0, 2**20, (b, n), dtype=np.int32))
+    starts = jnp.arange(b, dtype=jnp.int32) * n              # equal segments
+
+    results = {}
+    total = b * n
+
+    batched = jax.jit(lambda k, v: batched_multisplit(k, bf, v, method="bms").keys)
+    t_b = bench(batched, keys2d, vals2d)
+
+    seg = jax.jit(
+        lambda k, v: segmented_multisplit(k, bf, starts, v, method="bms").keys
+    )
+    t_s = bench(seg, keys2d.reshape(-1), vals2d.reshape(-1))
+
+    # host-loop baseline: what consumers did before plans had a batch axis —
+    # one flat multisplit call per row, op-by-op dispatch (consumers call the
+    # module-level multisplit eagerly: data pipeline, host-side routing).
+    def host_loop(k2, v2):
+        return [multisplit(k2[i], bf, v2[i], method="bms").keys for i in range(b)]
+
+    t_h = bench(host_loop, keys2d, vals2d)
+
+    # second reference point: the loop with the per-row call jitted — only
+    # the b-per-step dispatch overhead remains.
+    row_f = jax.jit(lambda k, v: multisplit(k, bf, v, method="bms").keys)
+
+    def host_loop_jit(k2, v2):
+        return [row_f(k2[i], v2[i]) for i in range(b)]
+
+    t_hj = bench(host_loop_jit, keys2d, vals2d)
+
+    tag = f"b={b}/n={n}/m={m}"
+    results[f"{tag}/batched_mkeys_s"] = round(total / t_b / 1e6, 2)
+    results[f"{tag}/segmented_mkeys_s"] = round(total / t_s / 1e6, 2)
+    results[f"{tag}/host_loop_mkeys_s"] = round(total / t_h / 1e6, 2)
+    results[f"{tag}/host_loop_jit_mkeys_s"] = round(total / t_hj / 1e6, 2)
+    results[f"{tag}/batched_speedup"] = round(t_h / t_b, 3)
+    results[f"{tag}/segmented_speedup"] = round(t_h / t_s, 3)
+    results[f"{tag}/batched_speedup_vs_jit_loop"] = round(t_hj / t_b, 3)
+    row(f"multisplit/kv/{tag}/batched-plan", t_b, f"{total / t_b / 1e6:.1f} Mkeys/s")
+    row(f"multisplit/kv/{tag}/segmented-plan", t_s, f"{total / t_s / 1e6:.1f} Mkeys/s")
+    row(f"multisplit/kv/{tag}/host-loop", t_h,
+        f"{total / t_h / 1e6:.1f} Mkeys/s ({t_h / t_b:.2f}x slower than batched)")
+    row(f"multisplit/kv/{tag}/host-loop-jit", t_hj,
+        f"{total / t_hj / 1e6:.1f} Mkeys/s ({t_hj / t_b:.2f}x slower than batched)")
+    if emit_json:
+        history = []
+        if BENCH_JSON.exists():
+            history = json.loads(BENCH_JSON.read_text())
+        history.append({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "n": total,
+            "key_value": True,
+            "host": jax.default_backend(),
+            "backend": "vmap",
+            "results": results,
+        })
+        BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
+        print(f"# trajectory point appended to {BENCH_JSON.name}")
+    return results
+
+
 def main():
     run(key_value=False)
     run(key_value=True)
     run_distributions()
     run_fused_vs_legacy()
+    run_batched_vs_host_loop()
 
 
 if __name__ == "__main__":

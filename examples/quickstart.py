@@ -7,7 +7,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.identifiers import delta_buckets, from_fn
-from repro.core.multisplit import multisplit
+from repro.core.multisplit import multisplit, segmented_multisplit
 from repro.core.sort import radix_sort
 from repro.core.histogram import histogram_even
 
@@ -31,7 +31,21 @@ sorted_keys, sorted_vals = radix_sort(keys, values, radix_bits=8)
 assert bool((jnp.diff(sorted_keys.astype(jnp.int64)) >= 0).all())
 print(f"radix sort OK: first keys {np.asarray(sorted_keys[:4])}")
 
-# --- 4. device-wide histogram (paper §7.3) ----------------------------------
+# --- 4. segmented routing: many ragged multisplits in ONE call --------------
+# Four "requests" of different sizes share one flat buffer; each is bucketed
+# independently (per-request counts, per-request stability) in one launch —
+# the building block for batched serving (DESIGN.md §9).
+segment_starts = jnp.asarray([0, 50_000, 50_000, 180_000], jnp.int32)  # one empty
+seg = segmented_multisplit(keys, bf, segment_starts, values)
+print(f"per-request bucket counts, shape {seg.bucket_counts.shape}:")
+print(f"  request 0 -> {np.asarray(seg.bucket_counts[0, :4])} ...")
+print(f"  request 1 (empty) -> {np.asarray(seg.bucket_counts[1, :4])} ...")
+assert int(seg.bucket_counts.sum()) == keys.shape[0]
+# each request's span is bucket-contiguous on its own
+ids0 = bf(seg.keys[:50_000])
+assert bool((jnp.diff(ids0) >= 0).all()), "request 0 bucket-contiguous"
+
+# --- 5. device-wide histogram (paper §7.3) ----------------------------------
 h = histogram_even(keys.astype(jnp.float32), 0.0, float(2**30), 64)
 print(f"histogram (64 even bins): min {int(h.min())}, max {int(h.max())}")
 print("quickstart OK")

@@ -27,9 +27,84 @@ import jax.numpy as jnp
 from repro.compat import shard_map as _shard_map
 from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier
-from repro.core.plan import make_plan, resolve_backend
+from repro.core.plan import MultisplitResult, make_plan, resolve_backend
 
 Array = jnp.ndarray
+
+
+def multisplit_all_shards(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    use_pallas: bool = False,
+    backend: Optional[str] = None,
+    tile: Optional[int] = None,
+) -> MultisplitResult:
+    """The device-level pipeline with the LOCAL stage as ONE batched plan.
+
+    ``keys`` is the (D, n_shard) stack of all shards. Stage 1 runs every
+    shard's bucket-major reorder + histogram in a single batched plan launch
+    (DESIGN.md §9) — the host-side analogue of ``multisplit_sharded``'s
+    per-device local stage, with the D-way host loop (or D separate plan
+    calls) collapsed into one grid. Stage 2 is the closed-form global scan
+    over the (D, m) histogram matrix H — the same math ``_send_plan``
+    computes from the all-gathered H, evaluated directly since every shard
+    is host-visible here. Output is the global stable bucket-major
+    multisplit of the concatenated shards (bitwise identical to
+    ``multisplit_ref`` on ``keys.reshape(-1)``), with the element-ordered
+    permutation in flat global coordinates.
+
+    Use this as the single-process path for multi-shard data (benchmarks,
+    verification, one-host serving); the collective version below is its
+    mesh-distributed twin.
+    """
+    d_num, n_shard = keys.shape
+    plan = make_plan(
+        n_shard,
+        bucket_fn.num_buckets,
+        method=method,
+        key_value=values is not None,
+        backend=resolve_backend(use_pallas, True, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+        batch=d_num,
+    )
+    local = plan(keys, values)                               # ONE launch, D shards
+    hist = local.bucket_counts                               # (D, m) == H
+    totals = hist.sum(axis=0).astype(jnp.int32)              # (m,)
+    g_flat = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals)[:-1].astype(jnp.int32)]
+    )
+    c_excl = (jnp.cumsum(hist, axis=0) - hist).astype(jnp.int32)     # (D, m)
+
+    # Reordered local slot j of shard d -> global position: the local buffer
+    # is bucket-major, so bucket-of-slot comes from the local histogram and
+    # the map is strictly increasing per (shard, bucket) run (paper §4.7).
+    lidx = jnp.arange(n_shard, dtype=jnp.int32)
+    lids = jax.vmap(
+        lambda c: jnp.searchsorted(c, lidx, side="right").astype(jnp.int32)
+    )(jnp.cumsum(hist, axis=1))                              # (D, n_shard)
+    rank = lidx[None, :] - jnp.take_along_axis(local.bucket_starts, lids, axis=1)
+    pos = g_flat[lids] + jnp.take_along_axis(c_excl, lids, axis=1) + rank
+
+    n_total = d_num * n_shard
+    keys_out = jnp.zeros((n_total,), keys.dtype).at[pos.reshape(-1)].set(
+        local.keys.reshape(-1)
+    )
+    values_out = None
+    if values is not None:
+        values_out = jnp.zeros((n_total,), values.dtype).at[pos.reshape(-1)].set(
+            local.values.reshape(-1)
+        )
+
+    # element-ordered permutation of the ORIGINAL (D, n_shard) input
+    ids = bucket_fn(keys)                                    # (D, n_shard)
+    rank_in = local.permutation - jnp.take_along_axis(local.bucket_starts, ids, axis=1)
+    perm = g_flat[ids] + jnp.take_along_axis(c_excl, ids, axis=1) + rank_in
+
+    return MultisplitResult(keys_out, values_out, g_flat, totals, perm.reshape(-1))
 
 
 def _local_plan(

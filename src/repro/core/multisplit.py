@@ -30,6 +30,10 @@ Three variants map to the paper's three implementations:
 * ``method="dms"``  — no reorder (Direct Multisplit).
 * ``method="wms"``  — tile-local reorder, small tiles (Warp-level MS).
 * ``method="bms"``  — tile-local reorder, large tiles (Block-level MS).
+
+Beyond the paper's single flat problem, :func:`batched_multisplit` and
+:func:`segmented_multisplit` run MANY independent multisplits (per batch
+row / per ragged segment) in one plan launch (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -45,9 +49,12 @@ from repro.core.plan import (            # re-exported for consumers/tests
     MultisplitResult,
     WMS_TILE,
     global_scan,
+    make_batched_plan,
     make_plan,
+    make_segmented_plan,
     pad_to_tiles as _pad_to_tiles,
     resolve_backend,
+    segment_ids_from_starts,
     tile_local_offsets,
 )
 
@@ -56,6 +63,7 @@ Array = jnp.ndarray
 __all__ = [
     "WMS_TILE", "BMS_TILE", "MultisplitResult", "global_scan",
     "tile_histogram", "tile_local_offsets", "multisplit_ref", "multisplit",
+    "batched_multisplit", "segmented_multisplit", "segment_ids_from_starts",
     "multisplit_unfused", "prescan", "postscan_positions",
 ]
 
@@ -143,6 +151,76 @@ def multisplit(
         bucket_fn=bucket_fn,
     )
     return plan(keys, values)
+
+
+# ---------------------------------------------------------------------------
+# Batched / segmented entry points (DESIGN.md §9): many independent
+# multisplits in ONE plan launch instead of a host loop over subproblems.
+# ---------------------------------------------------------------------------
+
+def batched_multisplit(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    tile: Optional[int] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    backend: Optional[str] = None,
+) -> MultisplitResult:
+    """Multisplit every row of ``keys`` (b, n) independently in one launch.
+
+    Bitwise identical to calling :func:`multisplit` on each row: returns
+    (b, n) keys/values/permutation and (b, m) per-row starts/counts.
+    """
+    if keys.ndim != 2:
+        raise ValueError(f"batched_multisplit expects (b, n) keys, got {keys.shape}")
+    b, n = keys.shape
+    plan = make_batched_plan(
+        b, n, bucket_fn.num_buckets,
+        method=method,
+        key_value=values is not None,
+        backend=resolve_backend(use_pallas, interpret, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+    )
+    return plan(keys, values)
+
+
+def segmented_multisplit(
+    keys: Array,
+    bucket_fn: BucketIdentifier,
+    segment_starts,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    tile: Optional[int] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    backend: Optional[str] = None,
+) -> MultisplitResult:
+    """Multisplit every ragged segment of flat ``keys`` independently in one
+    launch. ``segment_starts`` is an (s,) ascending vector of start offsets
+    with ``segment_starts[0] == 0``; segment i spans
+    ``[segment_starts[i], segment_starts[i+1])`` (the last ends at n) and
+    empty segments are allowed.
+
+    Bitwise identical to slicing out each segment and calling
+    :func:`multisplit` on it: each segment keeps its input span in the
+    output, ``bucket_starts``/``bucket_counts`` are (s, m) segment-local,
+    and ``permutation`` is segment-local.
+    """
+    seg = jnp.asarray(segment_starts, jnp.int32)
+    plan = make_segmented_plan(
+        keys.shape[0], int(seg.shape[0]), bucket_fn.num_buckets,
+        method=method,
+        key_value=values is not None,
+        backend=resolve_backend(use_pallas, interpret, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+    )
+    return plan(keys, values, segment_starts=seg)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier, radix_buckets
-from repro.core.plan import make_radix_plan, resolve_backend
+from repro.core.plan import make_radix_plan, make_segmented_radix_plan, resolve_backend
 
 Array = jnp.ndarray
 
@@ -49,14 +49,70 @@ def radix_sort(
     extracted INSIDE the fused kernels, so no label array is ever
     materialized host-side — the §3.4 RB-sort overhead the paper's
     multisplit-sort avoids (DESIGN.md §5).
+
+    2-D ``(b, n)`` keys sort every row independently through BATCHED radix
+    plans (DESIGN.md §9): still one kernel launch per pass, covering all
+    rows.
     """
     resolved = resolve_backend(use_pallas, interpret, backend)
+    if keys.ndim == 2:
+        batch, n = keys.shape
+    else:
+        batch, n = None, keys.shape[0]
     n_pass = math.ceil(key_bits / radix_bits)
     for k in range(n_pass):
         # Final pass may cover fewer bits (e.g. r=7: 4 passes of 7 + one of 4).
         bits = min(radix_bits, key_bits - k * radix_bits)
         plan = make_radix_plan(
+            n,
+            k * radix_bits,
+            bits,
+            method=method,
+            key_value=values is not None,
+            backend=resolved,
+            tile=tile,
+            batch=batch,
+        )
+        res = plan(keys, values)
+        keys = res.keys
+        values = res.values
+    return keys, values
+
+
+def segmented_radix_sort(
+    keys: Array,
+    segment_starts,
+    values: Optional[Array] = None,
+    *,
+    radix_bits: int = 8,
+    key_bits: int = 32,
+    method: str = "bms",
+    use_pallas: bool = False,
+    interpret: bool = True,
+    backend: Optional[str] = None,
+    tile: Optional[int] = None,
+) -> Tuple[Array, Optional[Array]]:
+    """Sort every ragged segment of flat uint32 ``keys`` independently, in
+    ONE sequence of ⌈key_bits/radix_bits⌉ segmented multisplit passes
+    (DESIGN.md §9) — not one pass sequence per segment.
+
+    ``segment_starts`` is the (s,) ascending start-offset vector of
+    :func:`repro.core.multisplit.segmented_multisplit`. Each pass routes
+    through a segmented radix plan whose kernels combine the segment id with
+    the digit in-register; segment membership is invariant across passes
+    (elements never cross segment boundaries), so one ``segment_starts``
+    drives all passes. Stable; bitwise identical to slicing out each segment
+    and running :func:`radix_sort` on it.
+    """
+    resolved = resolve_backend(use_pallas, interpret, backend)
+    seg = jnp.asarray(segment_starts, jnp.int32)
+    s = int(seg.shape[0])
+    n_pass = math.ceil(key_bits / radix_bits)
+    for k in range(n_pass):
+        bits = min(radix_bits, key_bits - k * radix_bits)
+        plan = make_segmented_radix_plan(
             keys.shape[0],
+            s,
             k * radix_bits,
             bits,
             method=method,
@@ -64,7 +120,7 @@ def radix_sort(
             backend=resolved,
             tile=tile,
         )
-        res = plan(keys, values)
+        res = plan(keys, values, segment_starts=seg)
         keys = res.keys
         values = res.values
     return keys, values

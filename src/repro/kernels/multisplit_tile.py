@@ -23,6 +23,13 @@ Kernels:
 * ``tile_reorder_pallas``          — standalone reorder, kept as the unfused
                                      baseline for kernel tests and the
                                      fused-vs-legacy benchmark.
+
+Segmented variants (``seg_*``, DESIGN.md §9): identical math, but each tile
+additionally carries a per-element SEGMENT id strip. The kernel combines
+``cid = seg * m + bucket`` in-register, so the one-hot/cumsum pass ranks
+every element within its own (segment, bucket) cell — many independent
+ragged multisplits per grid launch, no host-side combined-id array and no
+per-segment relaunch.
 """
 
 from __future__ import annotations
@@ -167,6 +174,144 @@ def fused_postscan_reorder_pallas(
     args = (ids_tiled, g_pad, keys_tiled) + ((values_tiled,) if has_values else ())
     out = pl.pallas_call(
         functools.partial(_fused_postscan_kernel, m_pad=m_pad, has_values=has_values),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+# ---------------------------------------------------------------------------
+# Segmented kernels: the segment id rides THROUGH the one-hot/cumsum pass as
+# the high part of the combined bucket id cid = seg*m + bucket (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+def _seg_histogram_kernel(ids_ref, seg_ref, hist_ref, *, m: int, m_pad: int):
+    cid = ids_ref[0, :] + seg_ref[0, :] * m                 # in-register combine
+    hist_ref[0, :] = _one_hot(cid, m_pad).sum(axis=0).astype(jnp.int32)
+
+
+def seg_tile_histograms_pallas(
+    ids_tiled: Array, seg_tiled: Array, num_buckets: int, num_segments: int,
+    *, interpret: bool = True,
+) -> Array:
+    """(L, T) bucket ids + (L, T) segment ids -> (L, s*m) combined histograms."""
+    n_tiles, t = ids_tiled.shape
+    m_eff = num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    out = pl.pallas_call(
+        functools.partial(_seg_histogram_kernel, m=num_buckets, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+        interpret=interpret,
+    )(ids_tiled, seg_tiled)
+    return out[:, :m_eff]
+
+
+def _seg_positions_kernel(ids_ref, seg_ref, g_ref, pos_ref, *, m: int, m_pad: int):
+    cid = ids_ref[0, :] + seg_ref[0, :] * m
+    g = g_ref[0, :].astype(jnp.float32)
+    one_hot = _one_hot(cid, m_pad)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)
+    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    pos_ref[0, :] = (base + local).astype(jnp.int32)
+
+
+def seg_tile_positions_pallas(
+    ids_tiled: Array, seg_tiled: Array, g: Array, num_buckets: int, num_segments: int,
+    *, interpret: bool = True,
+) -> Array:
+    """Segmented DMS postscan: combined (seg, bucket) destinations, eq. (2)."""
+    n_tiles, t = ids_tiled.shape
+    m_eff = num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
+    return pl.pallas_call(
+        functools.partial(_seg_positions_kernel, m=num_buckets, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(ids_tiled, seg_tiled, g_pad)
+
+
+def _seg_fused_postscan_kernel(*refs, m: int, m_pad: int, has_values: bool):
+    if has_values:
+        (ids_ref, seg_ref, g_ref, keys_ref, vals_ref,
+         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
+    else:
+        (ids_ref, seg_ref, g_ref, keys_ref,
+         keys_out_ref, pos_out_ref, perm_out_ref) = refs
+        vals_ref = vals_out_ref = None
+
+    cid = ids_ref[0, :] + seg_ref[0, :] * m                 # in-register combine
+    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
+        cid, g_ref[0, :], keys_ref[0, :],
+        vals_ref[0, :] if has_values else None, m_pad,
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def seg_fused_postscan_reorder_pallas(
+    ids_tiled: Array,
+    seg_tiled: Array,
+    g: Array,
+    keys_tiled: Array,
+    values_tiled: Optional[Array],
+    num_buckets: int,
+    num_segments: int,
+    *,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Segmented fused postscan+reorder: per-tile (segment, bucket)-major
+    reorder + global destinations from ONE one-hot/cumsum evaluation over the
+    combined id. Output contract matches :func:`fused_postscan_reorder_pallas`
+    with the bucket axis widened to ``s*m``."""
+    n_tiles, t = ids_tiled.shape
+    m_eff = num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    in_specs = [row, row, pl.BlockSpec((1, m_pad), lambda i: (i, 0)), row] + (
+        [row] if has_values else []
+    )
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    args = (ids_tiled, seg_tiled, g_pad, keys_tiled) + (
+        (values_tiled,) if has_values else ()
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _seg_fused_postscan_kernel, m=num_buckets, m_pad=m_pad, has_values=has_values
+        ),
         grid=(n_tiles,),
         in_specs=in_specs,
         out_specs=out_specs,

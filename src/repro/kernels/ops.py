@@ -73,6 +73,85 @@ def radix_fused_postscan_reorder(
     )
 
 
+# -- segmented entry points (DESIGN.md §9): segment id rides in-kernel ------
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))
+def seg_tile_histograms(
+    ids_tiled: Array, seg_tiled: Array, num_buckets: int, num_segments: int,
+    interpret: bool = True,
+) -> Array:
+    return _mst.seg_tile_histograms_pallas(
+        ids_tiled, seg_tiled, num_buckets, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))
+def seg_tile_positions(
+    ids_tiled: Array, seg_tiled: Array, g: Array, num_buckets: int, num_segments: int,
+    interpret: bool = True,
+) -> Array:
+    return _mst.seg_tile_positions_pallas(
+        ids_tiled, seg_tiled, g, num_buckets, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))
+def seg_fused_postscan_reorder(
+    ids_tiled: Array,
+    seg_tiled: Array,
+    g: Array,
+    keys_tiled: Array,
+    values_tiled: Optional[Array],
+    num_buckets: int,
+    num_segments: int,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE segmented WMS/BMS postscan entry point (see multisplit_tile)."""
+    return _mst.seg_fused_postscan_reorder_pallas(
+        ids_tiled, seg_tiled, g, keys_tiled, values_tiled, num_buckets,
+        num_segments, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "num_segments", "interpret"))
+def seg_radix_tile_histograms(
+    keys_tiled: Array, seg_tiled: Array, shift: int, bits: int, num_segments: int,
+    interpret: bool = True,
+) -> Array:
+    return _radix.seg_radix_tile_histograms_pallas(
+        keys_tiled, seg_tiled, shift, bits, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "num_segments", "interpret"))
+def seg_radix_tile_positions(
+    keys_tiled: Array, seg_tiled: Array, g: Array, shift: int, bits: int,
+    num_segments: int, interpret: bool = True,
+) -> Array:
+    return _radix.seg_radix_tile_positions_pallas(
+        keys_tiled, seg_tiled, g, shift, bits, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "bits", "num_segments", "interpret"))
+def seg_radix_fused_postscan_reorder(
+    keys_tiled: Array,
+    seg_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    shift: int,
+    bits: int,
+    num_segments: int,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE segmented fused radix postscan entry point (digits never leave
+    the kernel; the segment id rides with them)."""
+    return _radix.seg_radix_fused_postscan_reorder_pallas(
+        keys_tiled, seg_tiled, g, values_tiled, shift, bits, num_segments,
+        interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
 def device_histogram(ids_tiled: Array, num_buckets: int, interpret: bool = True) -> Array:
     return _hist.device_histogram_pallas(ids_tiled, num_buckets, interpret=interpret)

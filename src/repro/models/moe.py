@@ -23,7 +23,7 @@ identical between sort and multisplit since both are stable).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,24 +81,87 @@ def _router(p, xn: Array, cfg: ModelConfig):
     return gates, experts, lb, z
 
 
-def _ranks_multisplit(expert_ids: Array, num_experts: int) -> Tuple[Array, Array]:
+def _ranks_multisplit(
+    expert_ids: Array, num_experts: int, segment_starts: Optional[Array] = None
+) -> Tuple[Array, Array]:
     """Stable rank of each virtual token within its expert + expert counts.
 
-    THE paper technique: per-tile histograms (prescan), one exclusive scan
-    over the row-vectorized H (scan), tile-local offsets (postscan).
+    THE paper technique, executed as ONE multisplit plan call (DMS: the
+    positions-only pipeline — prescan, one global scan, postscan; no
+    reorder). With ``segment_starts`` the call is a single SEGMENTED
+    multisplit (DESIGN.md §9): ranks restart per segment and ``counts`` is
+    the (s, e) per-segment expert histogram — per-request routing in one
+    launch instead of a host loop over requests.
+    """
+    from repro.core.identifiers import identity_buckets
+    from repro.core.plan import make_plan
+
+    n = expert_ids.shape[0]
+    bf = identity_buckets(num_experts)
+    tile = min(DISPATCH_TILE, max(int(n), 1))
+    if segment_starts is None:
+        plan = make_plan(
+            n, num_experts, method="dms", backend="vmap", tile=tile, bucket_fn=bf
+        )
+        res = plan(expert_ids)
+        ranks = res.permutation - res.bucket_starts[expert_ids]
+        return ranks.astype(jnp.int32), res.bucket_counts
+    ranks, counts, _ = _segmented_ranks(
+        expert_ids, jnp.asarray(segment_starts, jnp.int32), num_experts, tile
+    )
+    return ranks, counts
+
+
+def _segmented_ranks(
+    expert_ids: Array, seg: Array, num_experts: int, tile: int
+) -> Tuple[Array, Array, Array]:
+    """One segmented multisplit call -> (ranks, (s, e) counts, seg_ids);
+    the derived per-token segment id is returned so hot-path callers don't
+    recompute the searchsorted."""
+    from repro.core.identifiers import identity_buckets
+    from repro.core.plan import make_plan, segment_ids_from_starts
+
+    n = expert_ids.shape[0]
+    plan = make_plan(
+        n, num_experts, method="dms", backend="vmap", tile=tile,
+        bucket_fn=identity_buckets(num_experts), segments=int(seg.shape[0]),
+    )
+    res = plan(expert_ids, segment_starts=seg)
+    seg_ids = segment_ids_from_starts(seg, n)
+    ranks = res.permutation - res.bucket_starts[seg_ids, expert_ids]
+    return ranks.astype(jnp.int32), res.bucket_counts, seg_ids
+
+
+def route_tokens_segmented(
+    expert_ids: Array,
+    segment_starts: Array,
+    num_experts: int,
+    capacity: int,
+) -> Tuple[Array, Array, Array]:
+    """Per-request token routing: ONE segmented multisplit call assigns every
+    virtual token a slot in its request's (expert, capacity) block.
+
+    ``expert_ids`` is the flat concatenation of per-request expert
+    assignments; ``segment_starts`` the (s,) request boundaries. Returns
+    ``(slot, keep, counts)``: ``slot[i] = (seg_i·E + expert_i)·capacity +
+    rank_i`` for kept tokens (an index into a (s·E·capacity,) dispatch
+    buffer; dropped tokens point one past the end), the per-token keep mask
+    (rank < capacity, stable within each (request, expert) pair), and the
+    (s, E) per-request expert load. This is the building block for
+    capacity-per-request batched serving (ROADMAP "heavy traffic").
     """
     n = expert_ids.shape[0]
-    tile = min(DISPATCH_TILE, n)
-    ids_p, _ = ms._pad_to_tiles(expert_ids, tile, num_experts - 1)
-    ids_tiled = ids_p.reshape(-1, tile)
-    hist = ms.prescan(ids_tiled, num_experts)                      # local
-    g = ms.global_scan(hist)                                       # ONE global scan
-    pos = ms.postscan_positions(ids_tiled, g, num_experts).reshape(-1)[:n]
-    counts = hist.sum(0).astype(jnp.int32)
-    counts = counts.at[num_experts - 1].add(n - ids_p.shape[0])
-    starts = jnp.cumsum(counts) - counts
-    ranks = pos - starts[expert_ids]
-    return ranks.astype(jnp.int32), counts
+    seg = jnp.asarray(segment_starts, jnp.int32)
+    s = int(seg.shape[0])
+    tile = min(DISPATCH_TILE, max(int(n), 1))
+    ranks, counts, seg_ids = _segmented_ranks(expert_ids, seg, num_experts, tile)
+    keep = ranks < capacity
+    slot = jnp.where(
+        keep,
+        (seg_ids * num_experts + expert_ids) * capacity + ranks,
+        s * num_experts * capacity,
+    )
+    return slot.astype(jnp.int32), keep, counts
 
 
 def _ranks_sort(expert_ids: Array, num_experts: int) -> Tuple[Array, Array]:

@@ -10,7 +10,8 @@ dependency installed (see requirements.txt) this file is never imported.
 
 Only the surface used in this repo is implemented:
 ``given`` (positional or keyword strategies), ``settings(max_examples,
-deadline)``, ``strategies.integers``, ``strategies.lists``.
+deadline)``, ``strategies.integers``, ``strategies.lists``,
+``strategies.sampled_from``, ``strategies.booleans``, ``strategies.tuples``.
 """
 
 from __future__ import annotations
@@ -47,9 +48,34 @@ def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strat
     return _Strategy(draw)
 
 
+def _sampled_from(elements) -> _Strategy:
+    choices = list(elements)
+    if not choices:
+        raise ValueError("sampled_from requires a non-empty collection")
+
+    def draw(rng):
+        return choices[int(rng.randint(0, len(choices)))]
+
+    return _Strategy(draw)
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+
+def _tuples(*element_strategies: _Strategy) -> _Strategy:
+    def draw(rng):
+        return tuple(s.example(rng) for s in element_strategies)
+
+    return _Strategy(draw)
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.lists = _lists
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+strategies.tuples = _tuples
 
 
 _DEFAULT_MAX_EXAMPLES = 10

@@ -1,0 +1,207 @@
+"""Property-based cross-backend equivalence harness (DESIGN.md §9).
+
+Hypothesis strategies draw over the whole plan-layer configuration space —
+``(n, m, method, backend, key-only/key-value, batch/segment shapes)`` — and
+assert the algebraic properties that define multisplit (paper §3.1):
+
+* the output is a PERMUTATION of the input (multiset preserved, the
+  ``permutation`` field is a bijection);
+* the permutation is STABLE and bucket-contiguous;
+* ``bucket_counts`` equals the input histogram, ``bucket_starts`` its
+  exclusive prefix sum;
+* every backend (reference ↔ vmap ↔ pallas-interpret) produces bitwise
+  identical results;
+* batched / segmented plans are bitwise identical to running each row /
+  ragged segment through an independent flat plan.
+
+Runs under the real ``hypothesis`` package when installed, and under the
+deterministic fallback ``tests/_hypothesis_shim.py`` otherwise (CI exercises
+both).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.identifiers import delta_buckets
+from repro.core.multisplit import (
+    batched_multisplit,
+    multisplit,
+    multisplit_ref,
+    segmented_multisplit,
+)
+from repro.core.sort import radix_sort, segmented_radix_sort
+
+TILED_BACKENDS = ("vmap", "pallas-interpret")
+ALL_BACKENDS = ("reference",) + TILED_BACKENDS
+METHODS = ("dms", "wms", "bms")
+
+
+def _keys(n, seed, hi=2**30):
+    return jnp.asarray(
+        np.random.RandomState(seed % (2**31 - 1)).randint(0, hi, size=n, dtype=np.uint32)
+    )
+
+
+def _assert_result_equal(out, ref, key_value):
+    np.testing.assert_array_equal(np.asarray(out.keys), np.asarray(ref.keys))
+    np.testing.assert_array_equal(np.asarray(out.bucket_counts), np.asarray(ref.bucket_counts))
+    np.testing.assert_array_equal(np.asarray(out.bucket_starts), np.asarray(ref.bucket_starts))
+    np.testing.assert_array_equal(np.asarray(out.permutation), np.asarray(ref.permutation))
+    if key_value:
+        np.testing.assert_array_equal(np.asarray(out.values), np.asarray(ref.values))
+    else:
+        assert out.values is None
+
+
+def _assert_invariants(out, keys, bf):
+    """The §3.1 definition, checked against numpy from scratch."""
+    m = bf.num_buckets
+    keys_np = np.asarray(keys)
+    ids_np = np.asarray(bf(keys))
+    n = keys_np.shape[0]
+    perm = np.asarray(out.permutation)
+    counts = np.asarray(out.bucket_counts)
+    starts = np.asarray(out.bucket_starts)
+    # permutation: a bijection of [0, n)
+    np.testing.assert_array_equal(np.sort(perm), np.arange(n))
+    # counts == histogram; starts == exclusive prefix
+    np.testing.assert_array_equal(counts, np.bincount(ids_np, minlength=m))
+    np.testing.assert_array_equal(starts, np.cumsum(counts) - counts)
+    # stable bucket-major output: exactly the stable argsort by bucket id
+    order = np.argsort(ids_np, kind="stable")
+    np.testing.assert_array_equal(np.asarray(out.keys), keys_np[order])
+    # permutation consistent with the reordered keys
+    np.testing.assert_array_equal(keys_np, np.asarray(out.keys)[perm])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(0, 700),
+    m=st.integers(1, 40),
+    method=st.sampled_from(METHODS),
+    key_value=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flat_invariants_and_backend_agreement(n, m, method, key_value, seed):
+    keys = _keys(n, seed)
+    vals = jnp.arange(n, dtype=jnp.int32) if key_value else None
+    bf = delta_buckets(m, 2**30)
+    ref = multisplit_ref(keys, bf, vals)
+    _assert_invariants(ref, keys, bf)
+    for backend in TILED_BACKENDS:
+        out = multisplit(keys, bf, vals, method=method, tile=128, backend=backend)
+        _assert_result_equal(out, ref, key_value)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    n=st.integers(0, 300),
+    m=st.integers(1, 16),
+    method=st.sampled_from(METHODS),
+    backend=st.sampled_from(ALL_BACKENDS),
+    key_value=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_batched_matches_independent_rows(b, n, m, method, backend, key_value, seed):
+    keys = _keys(b * n, seed).reshape(b, n)
+    vals = (
+        jnp.arange(b * n, dtype=jnp.int32).reshape(b, n) if key_value else None
+    )
+    bf = delta_buckets(m, 2**30)
+    out = batched_multisplit(keys, bf, vals, method=method, tile=128, backend=backend)
+    assert out.keys.shape == (b, n)
+    assert out.bucket_counts.shape == (b, m)
+    for i in range(b):
+        ref = multisplit_ref(keys[i], bf, vals[i] if key_value else None)
+        np.testing.assert_array_equal(np.asarray(out.keys[i]), np.asarray(ref.keys))
+        np.testing.assert_array_equal(
+            np.asarray(out.bucket_counts[i]), np.asarray(ref.bucket_counts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.bucket_starts[i]), np.asarray(ref.bucket_starts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.permutation[i]), np.asarray(ref.permutation)
+        )
+        if key_value:
+            np.testing.assert_array_equal(np.asarray(out.values[i]), np.asarray(ref.values))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    lengths=st.lists(st.integers(0, 200), min_size=1, max_size=6),
+    m=st.integers(1, 16),
+    method=st.sampled_from(METHODS),
+    backend=st.sampled_from(ALL_BACKENDS),
+    key_value=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_segmented_matches_independent_segments(lengths, m, method, backend, key_value, seed):
+    """The acceptance criterion: a segmented multisplit over ragged segments
+    (empty ones included) is bitwise identical to independent flat calls."""
+    lengths = np.asarray(lengths, np.int64)
+    n = int(lengths.sum())
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]).astype(np.int32)
+    ends = np.concatenate([starts[1:], [n]])
+    keys = _keys(n, seed)
+    vals = jnp.arange(n, dtype=jnp.int32) if key_value else None
+    bf = delta_buckets(m, 2**30)
+    out = segmented_multisplit(
+        keys, bf, starts, vals, method=method, tile=128, backend=backend
+    )
+    assert out.bucket_counts.shape == (len(lengths), m)
+    for i, (a, e) in enumerate(zip(starts, ends)):
+        ref = multisplit_ref(keys[a:e], bf, vals[a:e] if key_value else None)
+        np.testing.assert_array_equal(np.asarray(out.keys[a:e]), np.asarray(ref.keys))
+        np.testing.assert_array_equal(
+            np.asarray(out.bucket_counts[i]), np.asarray(ref.bucket_counts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.bucket_starts[i]), np.asarray(ref.bucket_starts)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.permutation[a:e]), np.asarray(ref.permutation)
+        )
+        if key_value:
+            np.testing.assert_array_equal(np.asarray(out.values[a:e]), np.asarray(ref.values))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    lengths=st.lists(st.integers(0, 150), min_size=1, max_size=5),
+    backend=st.sampled_from(TILED_BACKENDS),
+    seed=st.integers(0, 2**16),
+)
+def test_segmented_radix_sort_property(lengths, backend, seed):
+    """Every ragged segment independently stable-sorted in one pass
+    sequence, for ANY segment shape."""
+    lengths = np.asarray(lengths, np.int64)
+    n = int(lengths.sum())
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]).astype(np.int32)
+    ends = np.concatenate([starts[1:], [n]])
+    keys = _keys(n, seed, hi=2**16)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    ks, vs = segmented_radix_sort(
+        keys, starts, vals, radix_bits=4, key_bits=16, tile=128, backend=backend
+    )
+    for a, e in zip(starts, ends):
+        seg = np.asarray(keys[a:e])
+        order = np.argsort(seg, kind="stable")
+        np.testing.assert_array_equal(np.asarray(ks[a:e]), seg[order])
+        np.testing.assert_array_equal(np.asarray(vs[a:e]), np.asarray(vals[a:e])[order])
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(0, 200),
+    backend=st.sampled_from(TILED_BACKENDS),
+    seed=st.integers(0, 2**16),
+)
+def test_batched_radix_sort_property(b, n, backend, seed):
+    """2-D radix_sort row-sorts == numpy row-sorts, for ANY batch shape."""
+    keys = _keys(b * n, seed, hi=2**16).reshape(b, n)
+    ks, _ = radix_sort(keys, radix_bits=4, key_bits=16, tile=128, backend=backend)
+    np.testing.assert_array_equal(np.asarray(ks), np.sort(np.asarray(keys), axis=1))
