@@ -11,16 +11,13 @@ Set ``MS_BENCH_N`` (power-of-two exponent, e.g. 14) to shrink the problem
 for CI smoke runs."""
 
 import functools
-import json
 import os
-import time
-from pathlib import Path
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench, row
+from benchmarks.common import append_trajectory, bench, row
 from repro.core.identifiers import delta_buckets
 from repro.core.multisplit import (
     batched_multisplit,
@@ -32,7 +29,6 @@ from repro.core.sort import direct_sort_multisplit, rb_sort_multisplit
 
 N = 1 << int(os.environ.get("MS_BENCH_N", "18"))
 M_SWEEP = (2, 8, 32, 128, 256)
-BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_multisplit.json"
 
 
 def _keys(n=N, seed=0):
@@ -111,19 +107,7 @@ def run_fused_vs_legacy(emit_json: bool = True):
             row(f"multisplit/kv/{tag}/legacy-unfused", t_l,
                 f"{N / t_l / 1e6:.1f} Mkeys/s ({t_l / t_f:.2f}x slower)")
     if emit_json:
-        history = []
-        if BENCH_JSON.exists():
-            history = json.loads(BENCH_JSON.read_text())
-        history.append({
-            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
-            "n": N,
-            "key_value": True,
-            "host": jax.default_backend(),
-            "backend": "vmap",
-            "results": results,
-        })
-        BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
-        print(f"# trajectory point appended to {BENCH_JSON.name}")
+        append_trajectory(results, n=N, key_value=True)
     return results
 
 
@@ -185,19 +169,7 @@ def run_batched_vs_host_loop(emit_json: bool = True):
     row(f"multisplit/kv/{tag}/host-loop-jit", t_hj,
         f"{total / t_hj / 1e6:.1f} Mkeys/s ({t_hj / t_b:.2f}x slower than batched)")
     if emit_json:
-        history = []
-        if BENCH_JSON.exists():
-            history = json.loads(BENCH_JSON.read_text())
-        history.append({
-            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
-            "n": total,
-            "key_value": True,
-            "host": jax.default_backend(),
-            "backend": "vmap",
-            "results": results,
-        })
-        BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
-        print(f"# trajectory point appended to {BENCH_JSON.name}")
+        append_trajectory(results, n=total, key_value=True)
     return results
 
 

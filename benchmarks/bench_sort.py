@@ -12,11 +12,37 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench, row
-from repro.core.sort import radix_sort
+from benchmarks.common import append_trajectory, bench, row
+from repro.core.sort import radix_sort, radix_sort_per_pass
 
 N = 1 << int(os.environ.get("MS_BENCH_N", "18"))
 N_PALLAS = min(N, 1 << 14)
+
+
+def run_chained_vs_per_pass_radix(emit_json: bool = True):
+    """DESIGN.md §10 measurement: the chained RadixPipeline (tiles resolved
+    once, buffers padded once, ping-pong across digit passes) vs the PR-2
+    per-pass execution (a full pad/tile/run/slice round trip per pass).
+    Appends a trajectory point to BENCH_multisplit.json."""
+    rng = np.random.RandomState(0)
+    keys = jnp.asarray(rng.randint(0, 2**32, N, dtype=np.uint32))
+    vals = jnp.arange(N, dtype=jnp.int32)
+    results = {}
+    for r in (4, 8):
+        chained = jax.jit(lambda k, v, r=r: radix_sort(k, v, radix_bits=r)[0])
+        per_pass = jax.jit(lambda k, v, r=r: radix_sort_per_pass(k, v, radix_bits=r)[0])
+        t_c = bench(chained, keys, vals)
+        t_p = bench(per_pass, keys, vals)
+        tag = f"radix/r={r}"
+        results[f"{tag}/chained_mpairs_s"] = round(N / t_c / 1e6, 2)
+        results[f"{tag}/per_pass_mpairs_s"] = round(N / t_p / 1e6, 2)
+        results[f"{tag}/speedup"] = round(t_p / t_c, 3)
+        row(f"sort/kv/{tag}/chained-pipeline", t_c, f"{N / t_c / 1e6:.1f} Mpairs/s")
+        row(f"sort/kv/{tag}/per-pass-legacy", t_p,
+            f"{N / t_p / 1e6:.1f} Mpairs/s ({t_p / t_c:.2f}x slower)")
+    if emit_json:
+        append_trajectory(results, n=N, key_value=True)
+    return results
 
 
 def main():
@@ -46,6 +72,8 @@ def main():
     t = bench(f, kp, warmup=1, trials=1)
     row("sort/keys/multisplit-sort/r=8/fused-pallas-interpret", t,
         f"{N_PALLAS / t / 1e6:.2f} Mkeys/s (interpret)")
+
+    run_chained_vs_per_pass_radix()
 
 
 if __name__ == "__main__":

@@ -1,9 +1,32 @@
 """Benchmark timing utilities."""
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_multisplit.json"
+
+
+def append_trajectory(results: dict, *, n: int, key_value: bool, backend: str = "vmap",
+                      path: Path = None) -> None:
+    """Append one timestamped trajectory point to BENCH_multisplit.json."""
+    path = path or BENCH_JSON
+    history = []
+    if path.exists():
+        history = json.loads(path.read_text())
+    history.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n,
+        "key_value": key_value,
+        "host": jax.default_backend(),
+        "backend": backend,
+        "results": results,
+    })
+    path.write_text(json.dumps(history, indent=2) + "\n")
+    print(f"# trajectory point appended to {path.name}")
 
 
 def bench(fn, *args, warmup=1, trials=3):

@@ -33,6 +33,9 @@ def main() -> None:
     if "histogram" in sections:
         from benchmarks import bench_histogram
 
+        if args.quick:
+            bench_histogram.M_SWEEP = (8, 256)
+            bench_histogram.RANGE_M_SWEEP = (8, 64)
         bench_histogram.main()
     if "sssp" in sections:
         from benchmarks import bench_sssp

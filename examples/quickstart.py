@@ -45,7 +45,14 @@ assert int(seg.bucket_counts.sum()) == keys.shape[0]
 ids0 = bf(seg.keys[:50_000])
 assert bool((jnp.diff(ids0) >= 0).all()), "request 0 bucket-contiguous"
 
-# --- 5. device-wide histogram (paper §7.3) ----------------------------------
+# --- 5. device-wide histogram (paper §7.3): a counts_only partial pipeline --
+# histogram() runs {prescan, tree-reduce} only — no scan, no scatter — via
+# mode="counts_only" (DESIGN.md §10); the same partial pipeline is one call
+# away for ANY bucket identifier:
 h = histogram_even(keys.astype(jnp.float32), 0.0, float(2**30), 64)
 print(f"histogram (64 even bins): min {int(h.min())}, max {int(h.max())}")
+counts = multisplit(keys, bf, mode="counts_only").bucket_counts
+assert int(counts.sum()) == keys.shape[0]
+assert bool((counts == out.bucket_counts).all()), "counts_only == full pipeline"
+print(f"counts_only histogram over {bf.name}: {np.asarray(counts[:6])} ...")
 print("quickstart OK")

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.compat import shard_map as _shard_map
 from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier
-from repro.core.plan import MultisplitResult, make_plan, resolve_backend
+from repro.core.pipeline import MultisplitResult, make_plan, resolve_backend
 
 Array = jnp.ndarray
 

@@ -3,8 +3,13 @@
 The paper reuses the pre-scan stage (tile histograms) and sums across
 subproblems instead of scanning — on TPU the "atomic add into the global
 array" becomes a tree reduction over the per-tile histogram matrix (no
-atomics; DESIGN.md §2). ``histogram_even`` / ``histogram_range`` mirror
-CUB's HistogramEven / HistogramRange used as the paper's comparison.
+atomics; DESIGN.md §2). This is exactly a ``counts_only`` partial pipeline
+(DESIGN.md §10): {prescan, reduce}, no scan, no scatter — so ``histogram``
+is a thin wrapper over one :func:`repro.core.pipeline.make_plan` call. Tile
+sizes come from the shared heuristic/autotune cache (the old hardcoded
+per-module tile constant and private plan-layer reach are gone).
+``histogram_even`` / ``histogram_range`` mirror CUB's HistogramEven /
+HistogramRange used as the paper's comparison.
 """
 
 from __future__ import annotations
@@ -13,36 +18,36 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core import multisplit as ms
 from repro.core.identifiers import BucketIdentifier, even_buckets, range_buckets
+from repro.core.pipeline import make_plan, resolve_backend
 
 Array = jnp.ndarray
-
-HIST_TILE = 4096
 
 
 def histogram(
     keys: Array,
     bucket_fn: BucketIdentifier,
     *,
-    tile: int = HIST_TILE,
+    tile: Optional[int] = None,
     use_pallas: bool = False,
     interpret: bool = True,
+    backend: Optional[str] = None,
 ) -> Array:
-    """Global bucket counts: prescan tiles, then reduce (no global scan)."""
-    m = bucket_fn.num_buckets
-    ids = bucket_fn(keys)
-    n = ids.shape[0]
-    ids_p, n_pad = ms._pad_to_tiles(ids, tile, m - 1)
-    ids_tiled = ids_p.reshape(-1, tile)
-    if use_pallas:
-        from repro.kernels import ops as kops
+    """Global bucket counts: a ``counts_only`` pipeline (prescan + reduce).
 
-        hist = kops.tile_histograms(ids_tiled, m, interpret=interpret)
-    else:
-        hist = ms.prescan(ids_tiled, m)
-    counts = hist.sum(axis=0).astype(jnp.int32)
-    return counts.at[m - 1].add(-n_pad)
+    ``tile=None`` resolves through the shared per-shape heuristic/autotune
+    cache — the same tile every other consumer of this shape gets.
+    """
+    plan = make_plan(
+        keys.shape[0],
+        bucket_fn.num_buckets,
+        method="bms",
+        backend=resolve_backend(use_pallas, interpret, backend),
+        tile=tile,
+        bucket_fn=bucket_fn,
+        mode="counts_only",
+    )
+    return plan(keys).bucket_counts
 
 
 def histogram_even(

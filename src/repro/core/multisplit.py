@@ -19,8 +19,9 @@ replaced by a one-hot matrix direct solve over a VMEM-resident tile — the
 same binary matrix ``H̄`` of paper §4.5, built with vector compares instead
 of ``__ballot`` and reduced/scanned with MXU/VPU ops instead of ``__popc``.
 
-Execution is owned by :mod:`repro.core.plan` (DESIGN.md §3): ``multisplit``
-resolves a :class:`repro.core.plan.MultisplitPlan` and runs it, so the
+Execution is owned by :mod:`repro.core.pipeline` (DESIGN.md §3, §10):
+``multisplit`` resolves a :class:`repro.core.pipeline.MultisplitPlan`
+through the backend registry and runs it, so the
 postscan + reorder is ONE fused evaluation per tile on every backend. The
 pre-plan three-pass host orchestration survives only as
 :func:`multisplit_unfused`, the fused-vs-legacy benchmark baseline.
@@ -44,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.identifiers import BucketIdentifier
-from repro.core.plan import (            # re-exported for consumers/tests
+from repro.core.pipeline import (        # re-exported for consumers/tests
     BMS_TILE,
     MultisplitResult,
     WMS_TILE,
@@ -79,7 +80,8 @@ def tile_histogram(bucket_ids: Array, num_buckets: int) -> Array:
 
 
 # tile_local_offsets (stable in-bucket rank + tile histogram, paper Alg. 3
-# without ballots) is defined once in repro.core.plan and re-exported above.
+# without ballots) is defined once in repro.core.pipeline and re-exported
+# above.
 
 
 # ---------------------------------------------------------------------------
@@ -92,9 +94,9 @@ def multisplit_ref(
     values: Optional[Array] = None,
 ) -> MultisplitResult:
     """O(n·m) direct evaluation of eq. (1). Oracle for everything else."""
-    from repro.core.plan import _direct_solve_reference
+    from repro.core.pipeline import direct_solve_reference
 
-    return _direct_solve_reference(keys, bucket_fn, values)
+    return direct_solve_reference(keys, bucket_fn, values)
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +132,7 @@ def multisplit(
     use_pallas: bool = False,
     interpret: bool = True,
     backend: Optional[str] = None,
+    mode: str = "reorder",
 ) -> MultisplitResult:
     """Stable multisplit of ``keys`` (and optional ``values``) into buckets.
 
@@ -139,7 +142,13 @@ def multisplit(
     differ in the width L of the global scan and in scatter contiguity.
 
     ``backend`` (overrides ``use_pallas``/``interpret``): "reference",
-    "vmap", "pallas-interpret", or "pallas" — see :mod:`repro.core.plan`.
+    "vmap", "pallas-interpret", or "pallas" — registered in
+    :mod:`repro.core.pipeline.registry`.
+
+    ``mode`` selects a partial pipeline (DESIGN.md §10): ``counts_only``
+    (prescan + reduce — the §7.3 histogram; only starts/counts are
+    computed) or ``positions_only`` (the eq. (2) permutation without
+    materializing reordered keys). Both are key-only.
     """
     plan = make_plan(
         keys.shape[0],
@@ -149,6 +158,7 @@ def multisplit(
         backend=resolve_backend(use_pallas, interpret, backend),
         tile=tile,
         bucket_fn=bucket_fn,
+        mode=mode,
     )
     return plan(keys, values)
 
@@ -168,11 +178,13 @@ def batched_multisplit(
     use_pallas: bool = False,
     interpret: bool = True,
     backend: Optional[str] = None,
+    mode: str = "reorder",
 ) -> MultisplitResult:
     """Multisplit every row of ``keys`` (b, n) independently in one launch.
 
     Bitwise identical to calling :func:`multisplit` on each row: returns
     (b, n) keys/values/permutation and (b, m) per-row starts/counts.
+    ``mode`` selects a partial pipeline as in :func:`multisplit`.
     """
     if keys.ndim != 2:
         raise ValueError(f"batched_multisplit expects (b, n) keys, got {keys.shape}")
@@ -184,6 +196,7 @@ def batched_multisplit(
         backend=resolve_backend(use_pallas, interpret, backend),
         tile=tile,
         bucket_fn=bucket_fn,
+        mode=mode,
     )
     return plan(keys, values)
 
@@ -199,6 +212,7 @@ def segmented_multisplit(
     use_pallas: bool = False,
     interpret: bool = True,
     backend: Optional[str] = None,
+    mode: str = "reorder",
 ) -> MultisplitResult:
     """Multisplit every ragged segment of flat ``keys`` independently in one
     launch. ``segment_starts`` is an (s,) ascending vector of start offsets
@@ -209,7 +223,8 @@ def segmented_multisplit(
     Bitwise identical to slicing out each segment and calling
     :func:`multisplit` on it: each segment keeps its input span in the
     output, ``bucket_starts``/``bucket_counts`` are (s, m) segment-local,
-    and ``permutation`` is segment-local.
+    and ``permutation`` is segment-local. ``mode`` selects a partial
+    pipeline as in :func:`multisplit`.
     """
     seg = jnp.asarray(segment_starts, jnp.int32)
     plan = make_segmented_plan(
@@ -219,6 +234,7 @@ def segmented_multisplit(
         backend=resolve_backend(use_pallas, interpret, backend),
         tile=tile,
         bucket_fn=bucket_fn,
+        mode=mode,
     )
     return plan(keys, values, segment_starts=seg)
 

@@ -1,0 +1,198 @@
+"""RadixPipeline: chained LSD digit passes on resident buffers (paper §7.1).
+
+The PR-2 ``radix_sort`` rebuilt the full pipeline front door every pass:
+re-resolve the tile, re-pad the keys to a tile multiple, re-tile, run, slice
+the pad tail off — ⌈key_bits/r⌉ times. Chaining removes the round trip:
+
+* tiles are resolved ONCE (the widest pass keys the heuristic/autotune
+  cache) and every per-pass plan shares them;
+* the keys/values buffers are padded ONCE with the all-ones sentinel key —
+  its digit is m−1 in EVERY pass, so after each pass's stable scatter the
+  pads land back at the tail and the next pass can consume the padded
+  buffer as-is (ping-pong: each pass scatters into a fresh buffer that
+  becomes the next pass's input; under jit XLA aliases the pair);
+* each pass is one :meth:`MultisplitPlan.run_tiled` sweep — prescan, scan,
+  postscan, scatter on pre-tiled buffers, no layout stage;
+* the pad tail is sliced off ONCE, after the last pass.
+
+Works for flat, batched (``batch=b``: per-row passes, one grid per pass) and
+segmented (``segments=s``: the position-keyed ``seg_tiled`` buffer is
+computed once — segment membership is invariant across passes) layouts, on
+every registered backend. The untiled reference backend simply iterates the
+direct solve (it never pads, so there is nothing to chain).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.pipeline import stages as _st
+from repro.core.pipeline.registry import get_backend
+from repro.core.pipeline.spec import make_radix_plan
+from repro.core.pipeline.tiles import resolve_tile
+
+Array = jnp.ndarray
+
+
+def radix_passes(radix_bits: int, key_bits: int) -> List[Tuple[int, int]]:
+    """The (shift, bits) schedule of an LSD radix sort; the final pass may
+    cover fewer bits (e.g. r=7 over 32-bit keys: 4 passes of 7 + one of 4)."""
+    n_pass = math.ceil(key_bits / radix_bits)
+    return [
+        (k * radix_bits, min(radix_bits, key_bits - k * radix_bits))
+        for k in range(n_pass)
+    ]
+
+
+class RadixPipeline:
+    """A resolved ⌈key_bits/r⌉-pass radix sort over one problem shape.
+
+    Build once (tiles resolved, one plan per digit pass), call with concrete
+    arrays. Layouts follow the plan layer: flat ``(n,)`` keys, batched
+    ``(b, n)`` rows (``batch=b``), or ragged segments over flat keys
+    (``segments=s`` + a ``segment_starts`` call argument).
+    """
+
+    def __init__(
+        self,
+        n: int,
+        *,
+        radix_bits: int = 8,
+        key_bits: int = 32,
+        method: str = "bms",
+        key_value: bool = False,
+        backend: str = "vmap",
+        tile: Optional[int] = None,
+        batch: Optional[int] = None,
+        segments: Optional[int] = None,
+    ):
+        self.n = n
+        self.key_value = key_value
+        self.backend = backend
+        self.batch = batch
+        self.segments = segments
+        self.passes = radix_passes(radix_bits, key_bits)
+        # ONE tile for every pass, keyed by the widest digit (first pass).
+        m_eff = (1 << self.passes[0][1]) * (segments or 1)
+        self.tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
+        self.plans = tuple(
+            make_radix_plan(
+                n, shift, bits, method=method, key_value=key_value,
+                backend=backend, tile=self.tile, batch=batch, segments=segments,
+            )
+            for shift, bits in self.passes
+        )
+
+    @property
+    def n_passes(self) -> int:
+        return len(self.passes)
+
+    def __call__(
+        self,
+        keys: Array,
+        values: Optional[Array] = None,
+        segment_starts=None,
+    ) -> Tuple[Array, Optional[Array]]:
+        if (values is not None) != self.key_value:
+            raise ValueError(
+                f"radix pipeline resolved for key_value={self.key_value} but "
+                f"called with values={'present' if values is not None else 'absent'}"
+            )
+        if self.batch is not None:
+            return self._call_batched(keys, values)
+        n = self.n
+        if keys.shape[0] != n:
+            raise ValueError(f"radix pipeline resolved for n={n}, got n={keys.shape[0]}")
+
+        seg = None
+        if self.segments is not None:
+            if segment_starts is None:
+                raise ValueError("segmented radix pipeline requires segment_starts")
+            seg = jnp.asarray(segment_starts, jnp.int32)
+            if seg.shape != (self.segments,):
+                raise ValueError(
+                    f"pipeline resolved for {self.segments} segments, got "
+                    f"segment_starts shape {seg.shape}"
+                )
+        elif segment_starts is not None:
+            raise ValueError("pipeline is not segmented; segment_starts not accepted")
+
+        if n == 0:
+            return keys, values
+
+        be = get_backend(self.backend)
+        if not be.tiled:
+            # the oracle never tiles: iterate the direct solve per pass
+            for plan in self.plans:
+                res = plan(keys, values, segment_starts=seg)
+                keys, values = res.keys, res.values
+            return keys, values
+
+        be.check_keys(keys)
+        tile = self.tile
+        # ---- pad ONCE: sentinel keys sort to the tail in every pass
+        keys_pad, _ = _st.pad_to_tiles(keys, tile, self.plans[0].pad_key(keys.dtype))
+        vals_pad = None
+        if values is not None:
+            vals_pad, _ = _st.pad_to_tiles(values, tile, 0)
+        seg_tiled = None
+        if seg is not None:
+            # position-keyed and pass-invariant: elements never cross
+            # segment boundaries, so one seg buffer drives all passes
+            seg_ids = _st.segment_ids_from_starts(seg, n)
+            seg_p, _ = _st.pad_to_tiles(seg_ids, tile, self.segments - 1)
+            seg_tiled = seg_p.reshape(-1, tile)
+
+        # ---- chained passes on resident buffers (reshape views are free)
+        for plan in self.plans:
+            keys_tiled = keys_pad.reshape(-1, tile)
+            vals_tiled = vals_pad.reshape(-1, tile) if vals_pad is not None else None
+            ids_tiled = None
+            if not plan.fused_radix():
+                ids_tiled = plan.ids_fn()(keys_pad).reshape(-1, tile)
+            keys_pad, vals_pad, _, _ = plan.run_tiled(
+                keys_tiled, ids_tiled, vals_tiled, seg_tiled
+            )
+
+        # ---- slice the pad tail off ONCE
+        return keys_pad[:n], (vals_pad[:n] if values is not None else None)
+
+    def _call_batched(
+        self, keys: Array, values: Optional[Array]
+    ) -> Tuple[Array, Optional[Array]]:
+        b, n = self.batch, self.n
+        if keys.shape != (b, n):
+            raise ValueError(
+                f"batched radix pipeline resolved for shape {(b, n)}, got {keys.shape}"
+            )
+        if n == 0:
+            return keys, values
+
+        be = get_backend(self.backend)
+        if not be.tiled:
+            for plan in self.plans:
+                res = plan(keys, values)
+                keys, values = res.keys, res.values
+            return keys, values
+
+        be.check_keys(keys)
+        tile = self.tile
+        l_b = -(-n // tile)
+        n_row = l_b * tile
+        keys_pad = _st.pad_rows(keys, n_row, self.plans[0].pad_key(keys.dtype))
+        vals_pad = _st.pad_rows(values, n_row, 0) if values is not None else None
+
+        for plan in self.plans:
+            keys_tiled = keys_pad.reshape(b * l_b, tile)
+            vals_tiled = vals_pad.reshape(b * l_b, tile) if vals_pad is not None else None
+            ids_tiled = None
+            if not plan.fused_radix():
+                ids_tiled = plan.ids_fn()(keys_pad).reshape(b * l_b, tile)
+            keys_pad, vals_pad, _, _ = plan.run_tiled(
+                keys_tiled, ids_tiled, vals_tiled, rows=b
+            )
+
+        return keys_pad[:, :n], (vals_pad[:, :n] if values is not None else None)

@@ -1,0 +1,294 @@
+"""Declarative backend registry for the multisplit pipeline.
+
+PR-1/PR-2 dispatched over {reference, vmap, pallas-interpret, pallas} with
+``if backend.startswith("pallas") ... else ...`` chains inlined into every
+stage method of the plan. This module replaces those chains with data: a
+:class:`Backend` descriptor per execution target, registered once, looked up
+by name. A backend bundles
+
+* capability flags (``tiled``, ``fuses_radix``, ``key_itemsize``) that the
+  stage graph consults instead of string-matching the backend name, and
+* a :class:`StageImpl` — the backend's implementations of the three local
+  pipeline stages (prescan / postscan-positions / postscan-reorder) over
+  pre-tiled buffers.
+
+Adding an execution target (e.g. a Triton port, or a compiled-CPU pallas
+variant) is one ``register_backend`` call; nothing in the stage graph, the
+consumers, or the chained radix pipeline changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import stages as _st
+
+Array = jnp.ndarray
+
+
+class StageImpl:
+    """Backend implementations of the local pipeline stages.
+
+    All methods operate on PRE-TILED ``(L, tile)`` buffers. ``spec`` is the
+    resolved :class:`~repro.core.pipeline.spec.PipelineSpec`; the segmented
+    layout is selected by ``seg_tiled is not None`` and the fused radix
+    identifier by ``spec.radix`` (digits never exist host-side on kernel
+    backends).
+    """
+
+    def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled) -> Array:
+        raise NotImplementedError
+
+    def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled) -> Array:
+        raise NotImplementedError
+
+    def reorder(self, spec, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled):
+        raise NotImplementedError
+
+
+class KernelStages(StageImpl):
+    """Pallas kernel stages (interpreted on CPU or compiled for TPU).
+
+    One fused VMEM pass per tile; radix digits and segment ids ride inside
+    the kernels (DESIGN.md §4, §5, §9).
+    """
+
+    def __init__(self, interpret: bool):
+        self.interpret = interpret
+
+    def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
+        from repro.kernels import ops as kops
+
+        m, s = spec.num_buckets, spec.segments
+        if spec.radix is not None:
+            shift, bits = spec.radix
+            if seg_tiled is not None:
+                return kops.seg_radix_tile_histograms(
+                    keys_tiled, seg_tiled, shift, bits, s, interpret=self.interpret
+                )
+            return kops.radix_tile_histograms(
+                keys_tiled, shift, bits, interpret=self.interpret
+            )
+        if seg_tiled is not None:
+            return kops.seg_tile_histograms(
+                ids_tiled, seg_tiled, m, s, interpret=self.interpret
+            )
+        return kops.tile_histograms(ids_tiled, m, interpret=self.interpret)
+
+    def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled):
+        from repro.kernels import ops as kops
+
+        m, s = spec.num_buckets, spec.segments
+        if spec.radix is not None:
+            shift, bits = spec.radix
+            if seg_tiled is not None:
+                return kops.seg_radix_tile_positions(
+                    keys_tiled, seg_tiled, g, shift, bits, s, interpret=self.interpret
+                )
+            return kops.radix_tile_positions(
+                keys_tiled, g, shift, bits, interpret=self.interpret
+            )
+        if seg_tiled is not None:
+            return kops.seg_tile_positions(
+                ids_tiled, seg_tiled, g, m, s, interpret=self.interpret
+            )
+        return kops.tile_positions(ids_tiled, g, m, interpret=self.interpret)
+
+    def reorder(self, spec, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled):
+        from repro.kernels import ops as kops
+
+        m, s = spec.num_buckets, spec.segments
+        if spec.radix is not None:
+            shift, bits = spec.radix
+            if seg_tiled is not None:
+                return kops.seg_radix_fused_postscan_reorder(
+                    keys_tiled, seg_tiled, g, vals_tiled, shift, bits, s,
+                    interpret=self.interpret,
+                )
+            return kops.radix_fused_postscan_reorder(
+                keys_tiled, g, vals_tiled, shift, bits, interpret=self.interpret
+            )
+        if seg_tiled is not None:
+            return kops.seg_fused_postscan_reorder(
+                ids_tiled, seg_tiled, g, keys_tiled, vals_tiled, m, s,
+                interpret=self.interpret,
+            )
+        return kops.fused_postscan_reorder(
+            ids_tiled, g, keys_tiled, vals_tiled, m, interpret=self.interpret
+        )
+
+
+class VmapStages(StageImpl):
+    """Tiled jnp stages: the SAME fusion as the kernels — local ranks, tile
+    starts, tile destination and global destination all from one
+    one-hot/cumsum evaluation per tile. Segmented tiles swap the one-hot for
+    its segmented-carry form + a scatter-add histogram, keeping the pass
+    O(T·m) instead of O(T·s·m) (DESIGN.md §9).
+    """
+
+    def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
+        m = spec.num_buckets
+        if seg_tiled is not None:
+            m_eff = spec.m_eff
+            cid = (seg_tiled * m + ids_tiled).astype(jnp.int32)
+            return jax.vmap(lambda c: _st.direct_counts(c, m_eff))(cid)
+        if spec.mode == "counts_only":
+            # histogram path: an O(T) scatter-add per tile — the O(T·m)
+            # one-hot below buys nothing when no postscan follows
+            return jax.vmap(lambda t: _st.direct_counts(t, m))(ids_tiled)
+        return jax.vmap(lambda t: _st.tile_local_offsets(t, m)[1])(ids_tiled)
+
+    def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled):
+        m = spec.num_buckets
+        if seg_tiled is not None:
+            def one_tile_seg(ids, segs, g_tile):
+                local = _st.seg_tile_local(ids, segs, m)
+                return g_tile[(segs * m + ids).astype(jnp.int32)] + local
+
+            return jax.vmap(one_tile_seg)(ids_tiled, seg_tiled, g)
+
+        def one_tile(ids, g_tile):
+            local, _ = _st.tile_local_offsets(ids, m)
+            return g_tile[ids] + local
+
+        return jax.vmap(one_tile)(ids_tiled, g)
+
+    def reorder(self, spec, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled):
+        m, m_eff = spec.num_buckets, spec.m_eff
+
+        def fused_tile(ids, segs, g_tile, keys_t, vals_t):
+            if segs is None:
+                local, hist = _st.tile_local_offsets(ids, m)
+                cid = ids
+            else:
+                local = _st.seg_tile_local(ids, segs, m)
+                cid = (segs * m + ids).astype(jnp.int32)
+                hist = _st.direct_counts(cid, m_eff)
+            starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+            dest = starts[cid] + local
+            pos = (g_tile[cid] + local).astype(jnp.int32)
+            keys_r = jnp.zeros_like(keys_t).at[dest].set(keys_t)
+            pos_r = jnp.zeros_like(pos).at[dest].set(pos)
+            if vals_t is None:
+                return keys_r, pos_r, pos
+            vals_r = jnp.zeros_like(vals_t).at[dest].set(vals_t)
+            return keys_r, vals_r, pos_r, pos
+
+        if seg_tiled is None:
+            if vals_tiled is None:
+                keys_r, pos_r, perm = jax.vmap(
+                    lambda i, gt, kt: fused_tile(i, None, gt, kt, None)
+                )(ids_tiled, g, keys_tiled)
+                return keys_r, None, pos_r, perm
+            keys_r, vals_r, pos_r, perm = jax.vmap(
+                lambda i, gt, kt, vt: fused_tile(i, None, gt, kt, vt)
+            )(ids_tiled, g, keys_tiled, vals_tiled)
+            return keys_r, vals_r, pos_r, perm
+        if vals_tiled is None:
+            keys_r, pos_r, perm = jax.vmap(
+                lambda i, sg, gt, kt: fused_tile(i, sg, gt, kt, None)
+            )(ids_tiled, seg_tiled, g, keys_tiled)
+            return keys_r, None, pos_r, perm
+        keys_r, vals_r, pos_r, perm = jax.vmap(fused_tile)(
+            ids_tiled, seg_tiled, g, keys_tiled, vals_tiled
+        )
+        return keys_r, vals_r, pos_r, perm
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered execution target for the pipeline stage graph.
+
+    ``tiled=False`` marks a direct-solve backend (no tiling, no scan — the
+    O(n·m) oracle); ``stages`` is then unused. ``fuses_radix`` advertises
+    in-kernel digit extraction (no host label array); ``key_itemsize``
+    restricts key width (pallas kernels are 32-bit-lane programs).
+    """
+
+    name: str
+    description: str
+    stages: Optional[StageImpl] = None
+    tiled: bool = True
+    uses_kernels: bool = False
+    fuses_radix: bool = False
+    key_itemsize: Optional[int] = None
+
+    def check_keys(self, keys: Array) -> None:
+        if self.key_itemsize is not None and keys.dtype.itemsize != self.key_itemsize:
+            raise ValueError(
+                f"backend {self.name!r} requires {8 * self.key_itemsize}-bit keys "
+                f"(got {keys.dtype}); use backend='vmap' for other widths"
+            )
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {backend_names()}"
+        ) from None
+
+
+def available_backends() -> Tuple[Backend, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register_backend(Backend(
+    name="reference",
+    description="O(n·m) direct evaluation of paper eq. (1); the oracle",
+    tiled=False,
+))
+register_backend(Backend(
+    name="vmap",
+    description="tiled jnp stages, fused per-tile closure",
+    stages=VmapStages(),
+))
+register_backend(Backend(
+    name="pallas-interpret",
+    description="Pallas kernels interpreted on CPU",
+    stages=KernelStages(interpret=True),
+    uses_kernels=True,
+    fuses_radix=True,
+    key_itemsize=4,
+))
+register_backend(Backend(
+    name="pallas",
+    description="Pallas kernels compiled for TPU (deployment target)",
+    stages=KernelStages(interpret=False),
+    uses_kernels=True,
+    fuses_radix=True,
+    key_itemsize=4,
+))
+
+# Compatibility tuple: the registered names, reference first (PR-1 order).
+BACKENDS = backend_names()
+
+
+def resolve_backend(
+    use_pallas: bool = False, interpret: bool = True, backend: Optional[str] = None
+) -> str:
+    """Map the legacy ``(use_pallas, interpret)`` knobs onto a backend name."""
+    if backend is not None:
+        return get_backend(backend).name
+    if not use_pallas:
+        return "vmap"
+    return "pallas-interpret" if interpret else "pallas"

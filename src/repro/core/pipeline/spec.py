@@ -1,0 +1,592 @@
+"""PipelineSpec + the executable plan: the stage graph of the multisplit
+pipeline (paper §4.1), with partial-pipeline modes.
+
+A :class:`PipelineSpec` declares WHAT to run — problem shape, method, layout
+(flat / batched / segmented), backend name, and ``mode``:
+
+* ``mode="reorder"`` (default): the full {prescan, scan, postscan+reorder,
+  scatter} pipeline — stable bucket-major output.
+* ``mode="counts_only"``: {prescan, tree-reduce} — the paper's §7.3
+  device-wide histogram. No scan, no scatter, no output permutation.
+* ``mode="positions_only"``: {prescan, scan, postscan-positions} — the
+  eq. (2) destination map WITHOUT materializing reordered keys (what MoE
+  dispatch and length-bucketing consume).
+
+:class:`MultisplitPlan` executes a spec by composing the stage
+implementations of the registered backend
+(:mod:`repro.core.pipeline.registry`) over the layout primitives of
+:mod:`repro.core.pipeline.stages`. Its :meth:`MultisplitPlan.run_tiled` runs
+one full sweep over PRE-TILED buffers — the unit the chained radix pipeline
+(:mod:`repro.core.pipeline.radix`) iterates without re-padding per pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.identifiers import BucketIdentifier
+from repro.core.pipeline import stages as _st
+from repro.core.pipeline.registry import get_backend
+from repro.core.pipeline.stages import MultisplitResult
+from repro.core.pipeline.tiles import resolve_tile
+
+Array = jnp.ndarray
+
+MODES = ("reorder", "counts_only", "positions_only")
+
+
+class Stage(NamedTuple):
+    """One node of a spec's stage graph: ``name`` is the pipeline role
+    (layout / prescan / scan / postscan / reduce / scatter / direct-solve),
+    ``impl`` the resolved implementation tag."""
+
+    name: str
+    impl: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """A declarative multisplit pipeline for one problem shape.
+
+    Frozen and hashable-by-identity: build via :func:`make_plan` /
+    :func:`make_radix_plan`. ``radix`` carries the (shift, bits) of a fused
+    digit identifier — on kernel backends bucket ids are then extracted
+    inside the kernels and never exist as a host/HBM array.
+
+    ``batch``/``segments`` (mutually exclusive) select the batched or
+    segmented layout (DESIGN.md §9): ``batch=b`` expects ``(b, n)`` inputs;
+    ``segments=s`` expects flat ``(n,)`` inputs plus a ``segment_starts``
+    call argument of shape ``(s,)``. ``mode`` selects how much of the
+    pipeline runs (module docstring / DESIGN.md §10).
+    """
+
+    n: int
+    num_buckets: int
+    method: str                     # dms | wms | bms
+    key_value: bool
+    backend: str
+    tile: int
+    radix: Optional[Tuple[int, int]] = None        # (shift, bits)
+    bucket_fn: Optional[BucketIdentifier] = None
+    batch: Optional[int] = None                    # leading (b, n) axis
+    segments: Optional[int] = None                 # ragged segments over (n,)
+    mode: str = "reorder"
+
+    # -- resolved properties ----------------------------------------------
+    @property
+    def m_eff(self) -> int:
+        """Width of the one-hot/scan: ``s*m`` for segmented plans, else m."""
+        return self.num_buckets * (self.segments or 1)
+
+    def ids_fn(self) -> BucketIdentifier:
+        if self.bucket_fn is not None:
+            return self.bucket_fn
+        if self.radix is None:
+            raise ValueError("plan has neither bucket_fn nor radix spec")
+        shift, bits = self.radix
+        mask = (1 << bits) - 1
+        return BucketIdentifier(
+            lambda u: ((u.astype(jnp.uint32) >> jnp.uint32(shift)) & jnp.uint32(mask)).astype(jnp.int32),
+            1 << bits,
+            name=f"radix[{shift}:{shift + bits}]",
+        )
+
+    def fused_radix(self) -> bool:
+        """True when the digit is extracted inside the kernels (no host ids)."""
+        return self.radix is not None and get_backend(self.backend).fuses_radix
+
+    def pad_key(self, dtype) -> int:
+        """Fused-radix pad sentinel: all-ones key — digit m-1 in EVERY pass,
+        so chained passes keep pads at the tail without re-padding."""
+        return (1 << 32) - 1 if dtype == jnp.uint32 else -1
+
+    # -- introspection -----------------------------------------------------
+    def stages(self) -> Tuple[str, ...]:
+        """Human/test-readable pipeline description (``name:impl`` strings)."""
+        be = get_backend(self.backend)
+        kernel = be.uses_kernels
+        fused_id = self.radix is not None and be.fuses_radix
+        pre = ("prescan:radix-fused-kernel" if fused_id
+               else "prescan:kernel" if kernel else "prescan:vmap")
+        positions = ("postscan:radix-positions-kernel" if fused_id
+                     else "postscan:positions-kernel" if kernel
+                     else "postscan:positions-vmap")
+        if self.method == "dms":
+            post = positions
+        else:
+            post = ("postscan:radix-fused-reorder-kernel" if fused_id
+                    else "postscan:fused-reorder-kernel" if kernel
+                    else "postscan:fused-reorder-vmap")
+        if not be.tiled:
+            base = ("direct-solve:reference",)
+        elif self.mode == "counts_only":
+            base = (pre, "reduce:counts")
+        elif self.mode == "positions_only":
+            base = (pre, "scan:global", positions)
+        else:
+            base = (pre, "scan:global", post, "scatter:bucket-major")
+        if self.batch is not None:
+            return (f"layout:batched[{self.batch}]",) + base
+        if self.segments is not None:
+            return (f"layout:segmented[{self.segments}]",) + base
+        return base
+
+    def stage_graph(self) -> Tuple[Stage, ...]:
+        """The stage descriptions as structured nodes."""
+        out = []
+        for s in self.stages():
+            name, _, impl = s.partition(":")
+            out.append(Stage(name, impl))
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultisplitPlan(PipelineSpec):
+    """An executable :class:`PipelineSpec`: call with concrete arrays."""
+
+    # -- stage entry points (delegating to the registered backend) ---------
+    def prescan(
+        self, keys_tiled: Optional[Array], ids_tiled: Optional[Array],
+        seg_tiled: Optional[Array] = None,
+    ) -> Array:
+        """Stage 1: per-tile (combined) bucket histograms -> H (L, m_eff)."""
+        return get_backend(self.backend).stages.prescan(
+            self, keys_tiled, ids_tiled, seg_tiled
+        )
+
+    def postscan(
+        self,
+        g: Array,
+        keys_tiled: Array,
+        ids_tiled: Optional[Array],
+        vals_tiled: Optional[Array],
+        seg_tiled: Optional[Array] = None,
+    ) -> Tuple[Array, Optional[Array], Array, Array]:
+        """Stage 3: returns (scatter_src_keys, scatter_src_vals, scatter_pos,
+        perm).
+
+        For wms/bms the sources are bucket-major within each tile and the
+        positions permuted to match — ONE one-hot/cumsum evaluation per tile
+        (the fused kernel / fused closure is the only postscan entry point).
+        ``perm`` is the element-ordered destination map (paper eq. (2)), a
+        free byproduct of the same evaluation. With ``seg_tiled`` the segment
+        id rides through the evaluation as the high part of the combined
+        bucket id (in-kernel on kernel backends).
+        """
+        impl = get_backend(self.backend).stages
+        if self.method == "dms":
+            pos = impl.positions(self, g, keys_tiled, ids_tiled, seg_tiled)
+            return keys_tiled, vals_tiled, pos, pos
+        return impl.reorder(self, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled)
+
+    # -- the resident-buffer sweep (the chained-radix building block) ------
+    def run_tiled(
+        self,
+        keys_tiled: Array,
+        ids_tiled: Optional[Array] = None,
+        vals_tiled: Optional[Array] = None,
+        seg_tiled: Optional[Array] = None,
+        rows: Optional[int] = None,
+    ) -> Tuple[Array, Optional[Array], Array, Array]:
+        """One full {prescan, scan, postscan, scatter} sweep over PRE-TILED
+        buffers. No padding is performed and no tail is sliced off: returns
+        ``(keys_pad, vals_pad, hist, perm_tiled)`` at the full padded length
+        (``(b, n_row)`` rows when ``rows=b`` — batched layout with a per-row
+        scan/scatter). :class:`~repro.core.pipeline.radix.RadixPipeline`
+        iterates this on resident ping-pong buffers, one call per digit
+        pass."""
+        hist = self.prescan(keys_tiled, ids_tiled, seg_tiled)
+        if rows is None:
+            g = _st.global_scan(hist)
+        else:
+            l_b = hist.shape[0] // rows
+            g = jax.vmap(_st.global_scan)(
+                hist.reshape(rows, l_b, hist.shape[-1])
+            ).reshape(hist.shape)
+        src_keys, src_vals, pos, perm_tiled = self.postscan(
+            g, keys_tiled, ids_tiled, vals_tiled, seg_tiled
+        )
+        if rows is None:
+            n_total = keys_tiled.size
+            scatter_pos = pos.reshape(-1)
+            keys_pad = (
+                jnp.zeros((n_total,), keys_tiled.dtype)
+                .at[scatter_pos].set(src_keys.reshape(-1))
+            )
+            vals_pad = None
+            if vals_tiled is not None:
+                vals_pad = (
+                    jnp.zeros((n_total,), vals_tiled.dtype)
+                    .at[scatter_pos].set(src_vals.reshape(-1))
+                )
+            return keys_pad, vals_pad, hist, perm_tiled
+        n_row = keys_tiled.size // rows
+        pos_rows = pos.reshape(rows, n_row)
+        scat = lambda p, src: jnp.zeros((n_row,), src.dtype).at[p].set(src)
+        keys_pad = jax.vmap(scat)(pos_rows, src_keys.reshape(rows, n_row))
+        vals_pad = None
+        if vals_tiled is not None:
+            vals_pad = jax.vmap(scat)(pos_rows, src_vals.reshape(rows, n_row))
+        return keys_pad, vals_pad, hist, perm_tiled
+
+    # -- layout helpers ----------------------------------------------------
+    def _empty_result(self, keys: Array, values: Optional[Array]) -> MultisplitResult:
+        """n == 0: every output is empty/zero in the layout's shapes."""
+        m = self.num_buckets
+        if self.batch is not None:
+            shape_cm = (self.batch, m)
+            perm = jnp.zeros((self.batch, 0), jnp.int32)
+        elif self.segments is not None:
+            shape_cm = (self.segments, m)
+            perm = jnp.zeros((0,), jnp.int32)
+        else:
+            shape_cm = (m,)
+            perm = jnp.zeros((0,), jnp.int32)
+        zeros = jnp.zeros(shape_cm, jnp.int32)
+        if self.mode == "counts_only":
+            return MultisplitResult(None, None, zeros, zeros, None)
+        if self.mode == "positions_only":
+            return MultisplitResult(None, None, zeros, zeros, perm)
+        return MultisplitResult(keys, values, zeros, zeros, perm)
+
+    def _check_key_width(self, keys: Array) -> None:
+        """Kernel backends are 32-bit-lane programs; keys only enter kernels
+        when the digit is fused or the pipeline reorders them — the partial
+        modes feed kernels nothing but int32 ids."""
+        if self.fused_radix() or self.mode == "reorder":
+            get_backend(self.backend).check_keys(keys)
+
+    # -- batched driver ----------------------------------------------------
+    def _call_batched(self, keys: Array, values: Optional[Array]) -> MultisplitResult:
+        b, n, m = self.batch, self.n, self.num_buckets
+        if keys.shape != (b, n):
+            raise ValueError(f"batched plan resolved for shape {(b, n)}, got {keys.shape}")
+        if values is not None and values.shape != (b, n):
+            raise ValueError(
+                f"batched plans require values of shape {(b, n)}, got {values.shape}"
+            )
+        if n == 0:
+            return self._empty_result(keys, values)
+
+        be = get_backend(self.backend)
+        if not be.tiled:
+            ids_fn = self.ids_fn()
+            if self.mode == "counts_only":
+                counts = jax.vmap(lambda k: _st.direct_counts(ids_fn(k), m))(keys)
+                return MultisplitResult(
+                    None, None, _st.exclusive_rows(counts), counts, None
+                )
+            solve = lambda k, v: _st.direct_solve_ids(k, ids_fn(k), m, v)
+            if values is None:
+                res = jax.vmap(lambda k: solve(k, None))(keys)
+            else:
+                res = jax.vmap(solve)(keys, values)
+            if self.mode == "positions_only":
+                return MultisplitResult(
+                    None, None, res.bucket_starts, res.bucket_counts, res.permutation
+                )
+            return res
+
+        self._check_key_width(keys)
+        fused = self.fused_radix()
+        tile = self.tile
+        l_b = -(-n // tile)                       # tiles per batch row
+        n_row = l_b * tile
+
+        # Per-row tiling: each tile belongs to exactly ONE batch row, so a
+        # single kernel grid of b*l_b programs covers the whole batch.
+        if fused:
+            keys_tiled = _st.pad_rows(
+                keys, n_row, self.pad_key(keys.dtype)
+            ).reshape(b * l_b, tile)
+            ids_tiled = None
+        else:
+            ids = self.ids_fn()(keys)
+            ids_tiled = _st.pad_rows(ids, n_row, m - 1).reshape(b * l_b, tile)
+            if self.mode != "reorder":
+                keys_tiled = None            # partial modes consume only ids
+            else:
+                keys_tiled = _st.pad_rows(keys, n_row, 0).reshape(b * l_b, tile)
+        vals_tiled = None
+        if values is not None:
+            vals_tiled = _st.pad_rows(values, n_row, 0).reshape(b * l_b, tile)
+
+        if self.mode == "counts_only":
+            hist = self.prescan(keys_tiled, ids_tiled)
+            counts = hist.reshape(b, l_b, m).sum(axis=1).astype(jnp.int32)
+            counts = counts.at[:, m - 1].add(n - n_row)          # drop pad sentinels
+            return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, None)
+
+        if self.mode == "positions_only":
+            hist = self.prescan(keys_tiled, ids_tiled)
+            g = jax.vmap(_st.global_scan)(hist.reshape(b, l_b, m)).reshape(b * l_b, m)
+            pos = get_backend(self.backend).stages.positions(
+                self, g, keys_tiled, ids_tiled, None
+            )
+            counts = hist.reshape(b, l_b, m).sum(axis=1).astype(jnp.int32)
+            counts = counts.at[:, m - 1].add(n - n_row)
+            return MultisplitResult(
+                None, None, _st.exclusive_rows(counts), counts,
+                pos.reshape(b, n_row)[:, :n],
+            )
+
+        keys_rows, vals_rows, hist, perm_tiled = self.run_tiled(
+            keys_tiled, ids_tiled, vals_tiled, rows=b
+        )
+        keys_out = keys_rows[:, :n]
+        values_out = vals_rows[:, :n] if values is not None else None
+        counts = hist.reshape(b, l_b, m).sum(axis=1).astype(jnp.int32)
+        counts = counts.at[:, m - 1].add(n - n_row)              # drop pad sentinels
+        return MultisplitResult(
+            keys_out, values_out, _st.exclusive_rows(counts), counts,
+            perm_tiled.reshape(b, n_row)[:, :n],
+        )
+
+    # -- full pipeline -----------------------------------------------------
+    def __call__(
+        self,
+        keys: Array,
+        values: Optional[Array] = None,
+        segment_starts: Optional[Array] = None,
+    ) -> MultisplitResult:
+        if (values is not None) != self.key_value:
+            raise ValueError(
+                f"plan resolved for key_value={self.key_value} but called with "
+                f"values={'present' if values is not None else 'absent'}"
+            )
+        if self.segments is None and segment_starts is not None:
+            raise ValueError("plan is not segmented; segment_starts not accepted")
+
+        if self.batch is not None:
+            return self._call_batched(keys, values)
+
+        if keys.shape[0] != self.n:
+            raise ValueError(f"plan resolved for n={self.n}, got n={keys.shape[0]}")
+        m, s = self.num_buckets, self.segments
+        m_eff = self.m_eff
+
+        seg_ids = None
+        if s is not None:
+            if segment_starts is None:
+                raise ValueError("segmented plan requires segment_starts")
+            segment_starts = jnp.asarray(segment_starts, jnp.int32)
+            if segment_starts.shape != (s,):
+                raise ValueError(
+                    f"plan resolved for {s} segments, got segment_starts shape "
+                    f"{segment_starts.shape}"
+                )
+            seg_ids = _st.segment_ids_from_starts(segment_starts, self.n)
+
+        if self.n == 0:
+            return self._empty_result(keys, values)
+
+        be = get_backend(self.backend)
+        if not be.tiled:
+            return self._call_direct(keys, values, seg_ids, segment_starts)
+
+        self._check_key_width(keys)
+        fused = self.fused_radix()
+        n = self.n
+
+        # ---- layout stage. Pads ride in (segment s-1,) bucket m-1 at the
+        # very tail, so they land after every real element and are sliced off
+        # below. For fused radix plans the pad key is all-ones: its digit is
+        # m-1 in EVERY pass.
+        if fused:
+            keys_p, _ = _st.pad_to_tiles(keys, self.tile, self.pad_key(keys.dtype))
+            keys_tiled = keys_p.reshape(-1, self.tile)
+            ids_tiled = None
+        else:
+            ids = self.ids_fn()(keys)
+            ids_p, _ = _st.pad_to_tiles(ids, self.tile, m - 1)
+            ids_tiled = ids_p.reshape(-1, self.tile)
+            if self.mode != "reorder":
+                keys_tiled = None            # partial modes consume only ids
+            else:
+                keys_p, _ = _st.pad_to_tiles(keys, self.tile, 0)
+                keys_tiled = keys_p.reshape(-1, self.tile)
+        seg_tiled = None
+        if s is not None:
+            seg_p, _ = _st.pad_to_tiles(seg_ids, self.tile, s - 1)
+            seg_tiled = seg_p.reshape(-1, self.tile)
+        n_total = keys_tiled.size if keys_tiled is not None else ids_tiled.size
+        vals_tiled = None
+        if values is not None:
+            vals_p, _ = _st.pad_to_tiles(values, self.tile, 0)
+            vals_tiled = vals_p.reshape(-1, self.tile)
+
+        def finalize_counts(hist):
+            counts = hist.sum(axis=0).astype(jnp.int32)
+            return counts.at[m_eff - 1].add(n - n_total)         # drop pad sentinels
+
+        # ---- partial pipelines: counts_only / positions_only
+        if self.mode == "counts_only":
+            counts = finalize_counts(self.prescan(keys_tiled, ids_tiled, seg_tiled))
+            if s is not None:
+                counts = counts.reshape(s, m)
+            return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, None)
+
+        if self.mode == "positions_only":
+            hist = self.prescan(keys_tiled, ids_tiled, seg_tiled)
+            g = _st.global_scan(hist)
+            pos = be.stages.positions(self, g, keys_tiled, ids_tiled, seg_tiled)
+            counts = finalize_counts(hist)
+            perm = pos.reshape(-1)[:n].astype(jnp.int32)
+            if s is not None:
+                counts = counts.reshape(s, m)
+                perm = perm - segment_starts[seg_ids]            # segment-LOCAL
+            return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, perm)
+
+        # ---- full pipeline: the resident-buffer sweep + tail slice.
+        # For segmented plans the combined (seg, bucket)-major order IS the
+        # segment-concatenated per-segment bucket-major order, so the same
+        # flat scatter lands every segment in its input span.
+        keys_pad, vals_pad, hist, perm_tiled = self.run_tiled(
+            keys_tiled, ids_tiled, vals_tiled, seg_tiled
+        )
+        keys_out = keys_pad[:n]
+        values_out = vals_pad[:n] if values is not None else None
+        counts = finalize_counts(hist)
+        perm = perm_tiled.reshape(-1)[:n]
+        if s is not None:
+            counts = counts.reshape(s, m)
+            return MultisplitResult(
+                keys_out, values_out, _st.exclusive_rows(counts), counts,
+                perm - segment_starts[seg_ids],                  # segment-LOCAL
+            )
+        return MultisplitResult(
+            keys_out, values_out, _st.exclusive_rows(counts), counts, perm
+        )
+
+    # -- direct-solve driver (the untiled oracle backend) ------------------
+    def _call_direct(
+        self, keys, values, seg_ids, segment_starts
+    ) -> MultisplitResult:
+        m, s = self.num_buckets, self.segments
+        ids = self.ids_fn()(keys)
+        if s is None:
+            if self.mode == "counts_only":
+                counts = _st.direct_counts(ids, m)
+                return MultisplitResult(
+                    None, None, _st.exclusive_rows(counts), counts, None
+                )
+            res = _st.direct_solve_ids(keys, ids, m, values)
+            if self.mode == "positions_only":
+                return MultisplitResult(
+                    None, None, res.bucket_starts, res.bucket_counts, res.permutation
+                )
+            return res
+        cid = (seg_ids * m + ids).astype(jnp.int32)
+        if self.mode == "counts_only":
+            counts = _st.direct_counts(cid, self.m_eff).reshape(s, m)
+            return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, None)
+        res = _st.direct_solve_ids(keys, cid, self.m_eff, values)
+        counts = res.bucket_counts.reshape(s, m)
+        perm = res.permutation - segment_starts[seg_ids]
+        if self.mode == "positions_only":
+            return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, perm)
+        return MultisplitResult(
+            res.keys, res.values, _st.exclusive_rows(counts), counts, perm
+        )
+
+
+def _validate_layout(batch: Optional[int], segments: Optional[int]) -> None:
+    if batch is not None and segments is not None:
+        raise ValueError("batch and segments are mutually exclusive plan layouts")
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if segments is not None and segments < 1:
+        raise ValueError(f"segments must be >= 1, got {segments}")
+
+
+def _validate_common(method: str, backend: str, mode: str, key_value: bool) -> None:
+    if method not in ("dms", "wms", "bms"):
+        raise ValueError(f"unknown multisplit method {method!r}")
+    get_backend(backend)                  # raises ValueError on unknown names
+    if mode not in MODES:
+        raise ValueError(f"unknown pipeline mode {mode!r}; expected one of {MODES}")
+    if mode != "reorder" and key_value:
+        raise ValueError(
+            f"mode={mode!r} never touches values; resolve with key_value=False"
+        )
+
+
+def make_plan(
+    n: int,
+    num_buckets: int,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    bucket_fn: Optional[BucketIdentifier] = None,
+    batch: Optional[int] = None,
+    segments: Optional[int] = None,
+    mode: str = "reorder",
+) -> MultisplitPlan:
+    """Resolve (n, m, method, key-value-ness, backend, mode) into a staged
+    plan.
+
+    ``batch=b`` resolves a batched plan over ``(b, n)`` inputs; ``segments=s``
+    a segmented plan over flat ``(n,)`` inputs with an ``(s,)``
+    ``segment_starts`` call argument (mutually exclusive). ``mode`` selects a
+    partial pipeline (``counts_only`` / ``positions_only``) or the full
+    reorder (module docstring)."""
+    _validate_common(method, backend, mode, key_value)
+    _validate_layout(batch, segments)
+    m_eff = num_buckets * (segments or 1)
+    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
+    return MultisplitPlan(
+        n=n, num_buckets=num_buckets, method=method, key_value=key_value,
+        backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
+        batch=batch, segments=segments, mode=mode,
+    )
+
+
+def make_radix_plan(
+    n: int,
+    shift: int,
+    bits: int,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    batch: Optional[int] = None,
+    segments: Optional[int] = None,
+    mode: str = "reorder",
+) -> MultisplitPlan:
+    """A plan whose bucket identifier is the radix digit (shift, bits) —
+    fused into the kernels on kernel backends (no label array in HBM)."""
+    _validate_common(method, backend, mode, key_value)
+    _validate_layout(batch, segments)
+    m = 1 << bits
+    m_eff = m * (segments or 1)
+    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
+    return MultisplitPlan(
+        n=n, num_buckets=m, method=method, key_value=key_value,
+        backend=backend, tile=resolved_tile, radix=(shift, bits),
+        batch=batch, segments=segments, mode=mode,
+    )
+
+
+def make_batched_plan(batch: int, n: int, num_buckets: int, **kw) -> MultisplitPlan:
+    """Batched plan over ``(batch, n)`` inputs: one launch for all rows."""
+    return make_plan(n, num_buckets, batch=batch, **kw)
+
+
+def make_segmented_plan(n: int, num_segments: int, num_buckets: int, **kw) -> MultisplitPlan:
+    """Segmented plan over flat ``(n,)`` inputs with ``num_segments`` ragged
+    segments (call with ``segment_starts=``): one launch for all segments."""
+    return make_plan(n, num_buckets, segments=num_segments, **kw)
+
+
+def make_segmented_radix_plan(
+    n: int, num_segments: int, shift: int, bits: int, **kw
+) -> MultisplitPlan:
+    """Segmented radix plan: one fused digit pass over all segments."""
+    return make_radix_plan(n, shift, bits, segments=num_segments, **kw)

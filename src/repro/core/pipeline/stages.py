@@ -1,0 +1,160 @@
+"""Stage primitives of the multisplit pipeline (paper §4.1).
+
+Every multisplit variant in the paper factors into
+
+    {local prescan} -> {one global scan} -> {local postscan (+ reorder)}
+
+and its applications are *partial or iterated* instances of that pipeline:
+the §7.3 histogram is prescan + reduce (no scan, no scatter), the §7.1 radix
+sort is the full pipeline iterated over digit passes.  This module owns the
+layout/stage *primitives* — padding/tiling, the global scan, the one-hot
+local solve and its segmented-carry form, and the O(n·m) direct solve — as
+free functions with no backend or dispatch logic.  Backend-specific stage
+implementations live in :mod:`repro.core.pipeline.registry`; the stage graph
+that composes them lives in :mod:`repro.core.pipeline.spec`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.identifiers import BucketIdentifier
+
+Array = jnp.ndarray
+
+
+class MultisplitResult(NamedTuple):
+    """Flat plans: shapes as commented. Batched plans prepend a ``b`` axis to
+    ``keys``/``values``/``permutation`` and return ``(b, m)`` starts/counts.
+    Segmented plans keep flat ``(n,)`` data arrays (segments occupy their
+    input spans) and return ``(s, m)`` segment-LOCAL starts/counts plus a
+    segment-local permutation.  Partial pipelines return ``None`` for the
+    fields their stage graph never computes: ``counts_only`` fills only
+    ``bucket_starts``/``bucket_counts``; ``positions_only`` additionally
+    fills ``permutation``."""
+
+    keys: Optional[Array]          # permuted keys, bucket-major, stable
+    values: Optional[Array]        # permuted values (None for key-only)
+    bucket_starts: Array           # (m,) start index of each bucket
+    bucket_counts: Array           # (m,) histogram
+    permutation: Optional[Array]   # (n,) dest position of input element i
+
+
+def segment_ids_from_starts(segment_starts: Array, n: int) -> Array:
+    """(s,) ascending start offsets (``starts[0] == 0``) -> (n,) segment id
+    per element. Consecutive equal starts denote empty segments (they own no
+    elements); the last segment ends at ``n``."""
+    pos = jnp.arange(n, dtype=jnp.int32)
+    seg = jnp.searchsorted(segment_starts.astype(jnp.int32), pos, side="right") - 1
+    return seg.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Layout: padding / tiling
+# ---------------------------------------------------------------------------
+
+def pad_to_tiles(x: Array, tile: int, fill) -> Tuple[Array, int]:
+    n = x.shape[0]
+    n_pad = (-n) % tile
+    if n_pad:
+        x = jnp.concatenate([x, jnp.full((n_pad,) + x.shape[1:], fill, x.dtype)])
+    return x, n_pad
+
+
+def pad_rows(x: Array, n_row: int, fill) -> Array:
+    """Pad every row of a ``(b, n)`` array out to ``n_row`` columns."""
+    n = x.shape[1]
+    if n_row == n:
+        return x
+    return jnp.pad(
+        x, ((0, 0), (0, n_row - n)), constant_values=jnp.asarray(fill, x.dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# The ONE global operation
+# ---------------------------------------------------------------------------
+
+def global_scan(hist_per_tile: Array) -> Array:
+    """Exclusive scan over the row-vectorized (bucket-major) H (paper §4.1).
+
+    ``hist_per_tile`` is (L, m); returns G (L, m): global base of
+    (tile l, bucket b).
+    """
+    h_t = hist_per_tile.T                                  # (m, L) bucket-major
+    flat = h_t.reshape(-1)
+    g = jnp.concatenate([jnp.zeros((1,), flat.dtype), jnp.cumsum(flat)[:-1]])
+    return g.reshape(h_t.shape).T                          # back to (L, m)
+
+
+# ---------------------------------------------------------------------------
+# Local solves (paper §4.5 one-hot form; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
+    """One one-hot/cumsum evaluation over one tile: (stable in-bucket rank,
+    tile histogram) — paper Alg. 3 without ballots. Canonical definition;
+    ``core.multisplit`` re-exports it."""
+    one_hot = (ids[:, None] == jnp.arange(m)[None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=0)
+    local = incl[jnp.arange(ids.shape[0]), ids] - 1
+    return local.astype(jnp.int32), incl[-1]
+
+
+def seg_tile_local(ids: Array, segs: Array, m: int) -> Array:
+    """Segmented stable in-bucket rank within one tile: an m-wide cumsum with
+    a per-segment CARRY subtraction instead of an s·m-wide one-hot — O(T·m)
+    regardless of the segment count (DESIGN.md §9). Relies on elements being
+    segment-sorted within the tile (the input is segment-contiguous)."""
+    t = ids.shape[0]
+    one_hot = (ids[:, None] == jnp.arange(m)[None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=0)
+    excl = jnp.concatenate([jnp.zeros((1, m), incl.dtype), incl[:-1]], axis=0)
+    first = jnp.searchsorted(segs, segs, side="left")       # first row of my segment
+    carry = excl[first, ids]                                # my bucket, before my segment
+    local = incl[jnp.arange(t), ids] - carry - 1
+    return local.astype(jnp.int32)
+
+
+def exclusive_rows(counts: Array) -> Array:
+    """Exclusive prefix along the last axis: bucket start offsets."""
+    return (jnp.cumsum(counts, axis=-1) - counts).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Direct solve (the reference oracle: one subproblem == whole input)
+# ---------------------------------------------------------------------------
+
+def direct_solve_ids(
+    keys: Array, ids: Array, m: int, values: Optional[Array]
+) -> MultisplitResult:
+    """O(n·m) direct evaluation of paper eq. (1) on precomputed bucket ids."""
+    if keys.shape[0] == 0:
+        zeros = jnp.zeros((m,), jnp.int32)
+        return MultisplitResult(keys, values, zeros, zeros, jnp.zeros((0,), jnp.int32))
+    local, hist = tile_local_offsets(ids, m)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)]
+    )
+    perm = starts[ids] + local
+    keys_out = jnp.zeros_like(keys).at[perm].set(keys)
+    values_out = None
+    if values is not None:
+        values_out = jnp.zeros_like(values).at[perm].set(values)
+    return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
+
+
+def direct_solve_reference(
+    keys: Array, bucket_fn: BucketIdentifier, values: Optional[Array]
+) -> MultisplitResult:
+    """O(n·m) direct evaluation of paper eq. (1): the oracle backend."""
+    return direct_solve_ids(keys, bucket_fn(keys), bucket_fn.num_buckets, values)
+
+
+def direct_counts(ids: Array, m: int) -> Array:
+    """Histogram of bucket (or combined seg·m+bucket) ids via scatter-add:
+    the counts_only form of the direct solve."""
+    return jnp.zeros((m,), jnp.int32).at[ids].add(1)

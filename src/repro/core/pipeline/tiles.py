@@ -1,0 +1,118 @@
+"""Tile sizing: per-shape heuristic + small autotune cache (paper Table 1).
+
+The tile height is the paper's subproblem-size knob: larger subproblems
+narrow the global scan matrix H but deepen the local solve. One module owns
+the heuristic, the cache, and the timing-based autotuner so EVERY consumer —
+flat, batched, segmented plans and the chained radix pipeline — resolves
+tiles through the same door (no more private ``HIST_TILE``-style constants
+scattered around the tree).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.identifiers import BucketIdentifier
+from repro.kernels.common import pad_lanes as _pad_lanes
+
+# "warp" tiles vs "block" tiles (paper Table 1 sizing knob).
+WMS_TILE = 1024
+BMS_TILE = 4096
+
+# VMEM budget for the heuristic (f32 working set of the fused postscan:
+# one-hot (T·m̄) + tril/permutation (T·T) + two reorder operands).
+_VMEM_BUDGET_BYTES = 8 << 20
+_MIN_TILE = 256
+
+_TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
+
+
+def _heuristic_tile(n: int, m: int, method: str, backend: str) -> int:
+    from repro.core.pipeline.registry import get_backend
+
+    base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
+    tile = base
+    if get_backend(backend).uses_kernels:
+        m_pad = _pad_lanes(m)
+        # fused postscan working set, f32 words
+        cost = lambda t: 4 * (3 * t * m_pad + t * t)
+        while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
+            tile //= 2
+    if n < tile:
+        # tiny input: one tile, padded to the next power of two (>= 128 lanes)
+        tile = max(128, 1 << max(n - 1, 0).bit_length())
+    return tile
+
+
+def resolve_tile(
+    n: int, m: int, method: str, key_value: bool, backend: str, requested: Optional[int] = None
+) -> int:
+    """Tile height for one subproblem; cached per shape, overridable.
+
+    An explicit ``requested`` tile is returned verbatim and deliberately
+    NEVER written into the cache: a one-off override must not change what
+    later same-shape calls resolve to (regression-tested)."""
+    if requested is not None:
+        return requested
+    key = (n, m, method, key_value, backend)
+    tile = _TILE_CACHE.get(key)
+    if tile is None:
+        tile = _heuristic_tile(n, m, method, backend)
+        _TILE_CACHE[key] = tile
+    return tile
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+
+
+def autotune_tile(
+    n: int,
+    bucket_fn: BucketIdentifier,
+    *,
+    method: str = "bms",
+    key_value: bool = False,
+    backend: str = "vmap",
+    candidates: Tuple[int, ...] = (256, 512, 1024, 2048, 4096),
+    trials: int = 3,
+    seed: int = 0,
+) -> int:
+    """Time the candidate tile sizes on synthetic uniform keys and pin the
+    winner in the per-shape cache. Returns the chosen tile."""
+    import numpy as np
+
+    from repro.core.pipeline.spec import make_plan
+
+    rng = np.random.RandomState(seed)
+    keys = jnp.asarray(rng.randint(0, 2**30, n, dtype=np.uint32))
+    values = jnp.arange(n, dtype=jnp.int32) if key_value else None
+    best, best_t = None, None
+    for tile in candidates:
+        if tile > max(n, _MIN_TILE):
+            continue
+        plan = make_plan(
+            n, bucket_fn.num_buckets, method=method, key_value=key_value,
+            backend=backend, tile=tile, bucket_fn=bucket_fn,
+        )
+        run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
+            lambda k: plan(k).keys
+        )
+        args = (keys, values) if key_value else (keys,)
+        jax.block_until_ready(run(*args))                    # compile
+        ts = []
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(*args))
+            ts.append(time.perf_counter() - t0)
+        t = min(ts)
+        if best is None or t < best:
+            best, best_t = t, tile
+    if best_t is not None:
+        _TILE_CACHE[(n, bucket_fn.num_buckets, method, key_value, backend)] = best_t
+    return best_t if best_t is not None else resolve_tile(
+        n, bucket_fn.num_buckets, method, key_value, backend
+    )

@@ -1,802 +1,78 @@
-"""MultisplitPlan: the one execution engine behind every multisplit consumer.
+"""Compatibility shim: the plan layer now lives in :mod:`repro.core.pipeline`.
 
-The paper's model (§4.1) is {local prescan} -> {one global scan} ->
-{local postscan + scatter}. Historically each consumer (``core.multisplit``,
-``core.sort``, ``core.distributed``) re-assembled that pipeline by hand and
-the host orchestration re-evaluated the per-tile one-hot/cumsum up to three
-times (postscan positions, key reorder, value reorder). The plan layer makes
-"one fused VMEM pass per tile" the architecture (DESIGN.md §3):
+PR-1/PR-2 grew ``core/plan.py`` into an 802-line monolith owning tiling,
+backend dispatch, tile sizing and every layout driver. PR-3 split it into the
+stage-graph pipeline package (DESIGN.md §10):
 
-* :func:`make_plan` resolves ``(n, m, method, key-only/key-value, backend)``
-  into a :class:`MultisplitPlan` — a staged pipeline whose postscan stage is
-  a SINGLE fused evaluation per tile (kernel or jnp), and whose tile size
-  (paper Table 1's subproblem-size knob) comes from a per-shape
-  heuristic/autotune cache owned by this module.
-* backends: ``reference`` (O(n·m) direct eq. (1) eval), ``vmap`` (tiled jnp,
-  fused per-tile closure), ``pallas-interpret`` (Pallas kernels interpreted
-  on CPU), ``pallas`` (compiled for TPU).
-* radix plans (:func:`make_radix_plan`) fuse digit extraction into the
-  kernels: ``radix_sort(use_pallas=True)`` never materializes a label array
-  in HBM — exactly the §3.4 RB-sort overhead the paper's multisplit avoids.
+* stage primitives        -> ``repro.core.pipeline.stages``
+* backend registry        -> ``repro.core.pipeline.registry``
+* tile heuristic/autotune -> ``repro.core.pipeline.tiles``
+* PipelineSpec + plans    -> ``repro.core.pipeline.spec``
+* chained radix passes    -> ``repro.core.pipeline.radix``
 
-Beyond the paper's single flat problem, a plan natively executes MANY
-independent multisplits in one launch (DESIGN.md §9):
-
-* **batched** (``batch=b``): inputs carry a leading ``(b, n)`` axis; every
-  row is an independent multisplit. Rows are tiled independently (each tile
-  belongs to exactly one row), so ONE kernel grid of ``b x tiles_per_row``
-  programs covers the whole batch; only the global scan and the final
-  scatter are per-row (a vmap over closed-form jnp, no kernel relaunch).
-* **segmented** (``segments=s``): a flat ``(n,)`` input plus a ragged
-  ``segment_starts`` (s,) boundary vector; every segment is an independent
-  multisplit. The segment id rides THROUGH the one-hot/cumsum pass as the
-  high part of a combined bucket id ``seg * m + bucket`` (fused inside the
-  kernels on pallas backends), so segments of any raggedness — including
-  empty ones — cost one launch total, not one launch per segment.
-
-Both modes return per-row / per-segment ``(b|s, m)`` counts and starts and a
-row/segment-LOCAL permutation, bitwise identical to running the same rows or
-segments through independent flat plans.
+Every public (and test-visible private) symbol keeps importing from here —
+``from repro.core.plan import make_plan`` etc. stays valid, warning-free, and
+backed by the exact same objects (the tile cache below IS the package's
+cache, not a copy). New code should import :mod:`repro.core.pipeline`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.identifiers import BucketIdentifier
-from repro.kernels.common import pad_lanes as _pad_lanes
-
-Array = jnp.ndarray
-
-BACKENDS = ("reference", "vmap", "pallas-interpret", "pallas")
-
-# Tile sizes: "warp" tiles vs "block" tiles (paper Table 1 sizing knob —
-# larger subproblem => narrower global scan matrix H, heavier local solve).
-WMS_TILE = 1024
-BMS_TILE = 4096
-
-# VMEM budget for the heuristic (f32 working set of the fused postscan:
-# one-hot (T·m̄) + tril/permutation (T·T) + two reorder operands).
-_VMEM_BUDGET_BYTES = 8 << 20
-_MIN_TILE = 256
-
-
-class MultisplitResult(NamedTuple):
-    """Flat plans: shapes as commented. Batched plans prepend a ``b`` axis to
-    ``keys``/``values``/``permutation`` and return ``(b, m)`` starts/counts.
-    Segmented plans keep flat ``(n,)`` data arrays (segments occupy their
-    input spans) and return ``(s, m)`` segment-LOCAL starts/counts plus a
-    segment-local permutation."""
-
-    keys: Array                    # permuted keys, bucket-major, stable
-    values: Optional[Array]        # permuted values (None for key-only)
-    bucket_starts: Array           # (m,) start index of each bucket
-    bucket_counts: Array           # (m,) histogram
-    permutation: Array             # (n,) dest position of input element i
-
-
-def resolve_backend(
-    use_pallas: bool = False, interpret: bool = True, backend: Optional[str] = None
-) -> str:
-    """Map the legacy ``(use_pallas, interpret)`` knobs onto a backend name."""
-    if backend is not None:
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
-        return backend
-    if not use_pallas:
-        return "vmap"
-    return "pallas-interpret" if interpret else "pallas"
-
-
-def segment_ids_from_starts(segment_starts: Array, n: int) -> Array:
-    """(s,) ascending start offsets (``starts[0] == 0``) -> (n,) segment id
-    per element. Consecutive equal starts denote empty segments (they own no
-    elements); the last segment ends at ``n``."""
-    pos = jnp.arange(n, dtype=jnp.int32)
-    seg = jnp.searchsorted(segment_starts.astype(jnp.int32), pos, side="right") - 1
-    return seg.astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# Tile sizing: per-shape heuristic + small autotune cache (paper Table 1)
-# ---------------------------------------------------------------------------
-
-_TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
-
-
-def _heuristic_tile(n: int, m: int, method: str, backend: str) -> int:
-    base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
-    tile = base
-    if backend.startswith("pallas"):
-        m_pad = _pad_lanes(m)
-        # fused postscan working set, f32 words
-        cost = lambda t: 4 * (3 * t * m_pad + t * t)
-        while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
-            tile //= 2
-    if n < tile:
-        # tiny input: one tile, padded to the next power of two (>= 128 lanes)
-        tile = max(128, 1 << max(n - 1, 0).bit_length())
-    return tile
-
-
-def resolve_tile(
-    n: int, m: int, method: str, key_value: bool, backend: str, requested: Optional[int] = None
-) -> int:
-    """Tile height for one subproblem; cached per shape, overridable.
-
-    An explicit ``requested`` tile is returned verbatim and deliberately
-    NEVER written into the cache: a one-off override must not change what
-    later same-shape calls resolve to (regression-tested)."""
-    if requested is not None:
-        return requested
-    key = (n, m, method, key_value, backend)
-    tile = _TILE_CACHE.get(key)
-    if tile is None:
-        tile = _heuristic_tile(n, m, method, backend)
-        _TILE_CACHE[key] = tile
-    return tile
-
-
-def clear_tile_cache() -> None:
-    _TILE_CACHE.clear()
-
-
-def autotune_tile(
-    n: int,
-    bucket_fn: BucketIdentifier,
-    *,
-    method: str = "bms",
-    key_value: bool = False,
-    backend: str = "vmap",
-    candidates: Tuple[int, ...] = (256, 512, 1024, 2048, 4096),
-    trials: int = 3,
-    seed: int = 0,
-) -> int:
-    """Time the candidate tile sizes on synthetic uniform keys and pin the
-    winner in the per-shape cache. Returns the chosen tile."""
-    import numpy as np
-
-    rng = np.random.RandomState(seed)
-    keys = jnp.asarray(rng.randint(0, 2**30, n, dtype=np.uint32))
-    values = jnp.arange(n, dtype=jnp.int32) if key_value else None
-    best, best_t = None, None
-    for tile in candidates:
-        if tile > max(n, _MIN_TILE):
-            continue
-        plan = make_plan(
-            n, bucket_fn.num_buckets, method=method, key_value=key_value,
-            backend=backend, tile=tile, bucket_fn=bucket_fn,
-        )
-        run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
-            lambda k: plan(k).keys
-        )
-        args = (keys, values) if key_value else (keys,)
-        jax.block_until_ready(run(*args))                    # compile
-        ts = []
-        for _ in range(trials):
-            t0 = time.perf_counter()
-            jax.block_until_ready(run(*args))
-            ts.append(time.perf_counter() - t0)
-        t = min(ts)
-        if best is None or t < best:
-            best, best_t = t, tile
-    if best_t is not None:
-        _TILE_CACHE[(n, bucket_fn.num_buckets, method, key_value, backend)] = best_t
-    return best_t if best_t is not None else resolve_tile(
-        n, bucket_fn.num_buckets, method, key_value, backend
-    )
-
-
-# ---------------------------------------------------------------------------
-# Shared tiling / scan helpers (the ONE global operation lives here)
-# ---------------------------------------------------------------------------
-
-def pad_to_tiles(x: Array, tile: int, fill) -> Tuple[Array, int]:
-    n = x.shape[0]
-    n_pad = (-n) % tile
-    if n_pad:
-        x = jnp.concatenate([x, jnp.full((n_pad,) + x.shape[1:], fill, x.dtype)])
-    return x, n_pad
-
-
-def global_scan(hist_per_tile: Array) -> Array:
-    """Exclusive scan over the row-vectorized (bucket-major) H (paper §4.1).
-
-    ``hist_per_tile`` is (L, m); returns G (L, m): global base of
-    (tile l, bucket b).
-    """
-    h_t = hist_per_tile.T                                  # (m, L) bucket-major
-    flat = h_t.reshape(-1)
-    g = jnp.concatenate([jnp.zeros((1,), flat.dtype), jnp.cumsum(flat)[:-1]])
-    return g.reshape(h_t.shape).T                          # back to (L, m)
-
-
-def tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
-    """One one-hot/cumsum evaluation over one tile: (stable in-bucket rank,
-    tile histogram) — paper Alg. 3 without ballots. Canonical definition;
-    ``core.multisplit`` re-exports it."""
-    one_hot = (ids[:, None] == jnp.arange(m)[None, :]).astype(jnp.int32)
-    incl = jnp.cumsum(one_hot, axis=0)
-    local = incl[jnp.arange(ids.shape[0]), ids] - 1
-    return local.astype(jnp.int32), incl[-1]
-
-
-_tile_local_offsets = tile_local_offsets
-
-
-def _seg_tile_local(ids: Array, segs: Array, m: int) -> Array:
-    """Segmented stable in-bucket rank within one tile: an m-wide cumsum with
-    a per-segment CARRY subtraction instead of an s·m-wide one-hot — O(T·m)
-    regardless of the segment count (DESIGN.md §9). Relies on elements being
-    segment-sorted within the tile (the input is segment-contiguous)."""
-    t = ids.shape[0]
-    one_hot = (ids[:, None] == jnp.arange(m)[None, :]).astype(jnp.int32)
-    incl = jnp.cumsum(one_hot, axis=0)
-    excl = jnp.concatenate([jnp.zeros((1, m), incl.dtype), incl[:-1]], axis=0)
-    first = jnp.searchsorted(segs, segs, side="left")       # first row of my segment
-    carry = excl[first, ids]                                # my bucket, before my segment
-    local = incl[jnp.arange(t), ids] - carry - 1
-    return local.astype(jnp.int32)
-
-
-def _exclusive_rows(counts: Array) -> Array:
-    """Exclusive prefix along the last axis: bucket start offsets."""
-    return (jnp.cumsum(counts, axis=-1) - counts).astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# The plan
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class MultisplitPlan:
-    """A resolved multisplit pipeline for one problem shape.
-
-    Frozen and hashable-by-identity: build via :func:`make_plan` /
-    :func:`make_radix_plan`, call with concrete arrays. ``radix`` carries the
-    (shift, bits) of a fused digit identifier — when set with a pallas
-    backend, bucket ids are extracted inside the kernels and never exist as a
-    host/HBM array.
-
-    ``batch``/``segments`` (mutually exclusive) select the batched or
-    segmented layout (module docstring / DESIGN.md §9): ``batch=b`` expects
-    ``(b, n)`` inputs; ``segments=s`` expects flat ``(n,)`` inputs plus a
-    ``segment_starts`` call argument of shape ``(s,)``.
-    """
-
-    n: int
-    num_buckets: int
-    method: str                     # dms | wms | bms
-    key_value: bool
-    backend: str
-    tile: int
-    radix: Optional[Tuple[int, int]] = None        # (shift, bits)
-    bucket_fn: Optional[BucketIdentifier] = None
-    batch: Optional[int] = None                    # leading (b, n) axis
-    segments: Optional[int] = None                 # ragged segments over (n,)
-
-    # -- introspection -----------------------------------------------------
-    def stages(self) -> Tuple[str, ...]:
-        """Human/test-readable pipeline description."""
-        kernel = self.backend.startswith("pallas")
-        fused_id = self.radix is not None and kernel
-        pre = ("prescan:radix-fused-kernel" if fused_id
-               else "prescan:kernel" if kernel else "prescan:vmap")
-        if self.method == "dms":
-            post = ("postscan:radix-positions-kernel" if fused_id
-                    else "postscan:positions-kernel" if kernel else "postscan:positions-vmap")
-        else:
-            post = ("postscan:radix-fused-reorder-kernel" if fused_id
-                    else "postscan:fused-reorder-kernel" if kernel
-                    else "postscan:fused-reorder-vmap")
-        if self.backend == "reference":
-            base = ("direct-solve:reference",)
-        else:
-            base = (pre, "scan:global", post, "scatter:bucket-major")
-        if self.batch is not None:
-            return (f"layout:batched[{self.batch}]",) + base
-        if self.segments is not None:
-            return (f"layout:segmented[{self.segments}]",) + base
-        return base
-
-    # -- helpers -----------------------------------------------------------
-    def _interpret(self) -> bool:
-        return self.backend != "pallas"
-
-    def _ids_fn(self) -> BucketIdentifier:
-        if self.bucket_fn is not None:
-            return self.bucket_fn
-        if self.radix is None:
-            raise ValueError("plan has neither bucket_fn nor radix spec")
-        shift, bits = self.radix
-        mask = (1 << bits) - 1
-        return BucketIdentifier(
-            lambda u: ((u.astype(jnp.uint32) >> jnp.uint32(shift)) & jnp.uint32(mask)).astype(jnp.int32),
-            1 << bits,
-            name=f"radix[{shift}:{shift + bits}]",
-        )
-
-    def _m_eff(self) -> int:
-        """Width of the one-hot/scan: ``s*m`` for segmented plans, else m."""
-        return self.num_buckets * (self.segments or 1)
-
-    # -- stage 1: prescan --------------------------------------------------
-    def prescan(
-        self, keys_tiled: Array, ids_tiled: Optional[Array],
-        seg_tiled: Optional[Array] = None,
-    ) -> Array:
-        m, s = self.num_buckets, self.segments
-        if self.backend.startswith("pallas"):
-            from repro.kernels import ops as kops
-
-            if self.radix is not None:
-                shift, bits = self.radix
-                if seg_tiled is not None:
-                    return kops.seg_radix_tile_histograms(
-                        keys_tiled, seg_tiled, shift, bits, s, interpret=self._interpret()
-                    )
-                return kops.radix_tile_histograms(
-                    keys_tiled, shift, bits, interpret=self._interpret()
-                )
-            if seg_tiled is not None:
-                return kops.seg_tile_histograms(
-                    ids_tiled, seg_tiled, m, s, interpret=self._interpret()
-                )
-            return kops.tile_histograms(ids_tiled, m, interpret=self._interpret())
-        if seg_tiled is not None:
-            # combined (seg, bucket) histogram via scatter-add: O(T + s·m)
-            # per tile instead of an s·m-wide one-hot (DESIGN.md §9)
-            m_eff = self._m_eff()
-            cid = (seg_tiled * m + ids_tiled).astype(jnp.int32)
-            return jax.vmap(
-                lambda c: jnp.zeros((m_eff,), jnp.int32).at[c].add(1)
-            )(cid)
-        return jax.vmap(lambda t: _tile_local_offsets(t, m)[1])(ids_tiled)
-
-    # -- stage 3: fused postscan (+ reorder for wms/bms) -------------------
-    def postscan(
-        self,
-        g: Array,
-        keys_tiled: Array,
-        ids_tiled: Optional[Array],
-        vals_tiled: Optional[Array],
-        seg_tiled: Optional[Array] = None,
-    ) -> Tuple[Array, Optional[Array], Array, Array]:
-        """Returns (scatter_src_keys, scatter_src_vals, scatter_pos, perm).
-
-        For wms/bms the sources are bucket-major within each tile and the
-        positions permuted to match — ONE one-hot/cumsum evaluation per tile
-        (the fused kernel / fused closure is the only postscan entry point).
-        ``perm`` is the element-ordered destination map (paper eq. (2)), a
-        free byproduct of the same evaluation. With ``seg_tiled`` the segment
-        id rides through the evaluation as the high part of the combined
-        bucket id (in-kernel on pallas backends).
-        """
-        m, s = self.num_buckets, self.segments
-        m_eff = self._m_eff()
-        pallas = self.backend.startswith("pallas")
-        if self.method == "dms":
-            if pallas:
-                from repro.kernels import ops as kops
-
-                if self.radix is not None:
-                    shift, bits = self.radix
-                    if seg_tiled is not None:
-                        pos = kops.seg_radix_tile_positions(
-                            keys_tiled, seg_tiled, g, shift, bits, s,
-                            interpret=self._interpret(),
-                        )
-                    else:
-                        pos = kops.radix_tile_positions(
-                            keys_tiled, g, shift, bits, interpret=self._interpret()
-                        )
-                elif seg_tiled is not None:
-                    pos = kops.seg_tile_positions(
-                        ids_tiled, seg_tiled, g, m, s, interpret=self._interpret()
-                    )
-                else:
-                    pos = kops.tile_positions(ids_tiled, g, m, interpret=self._interpret())
-            elif seg_tiled is not None:
-                def one_tile_seg(ids, segs, g_tile):
-                    local = _seg_tile_local(ids, segs, m)
-                    return g_tile[(segs * m + ids).astype(jnp.int32)] + local
-
-                pos = jax.vmap(one_tile_seg)(ids_tiled, seg_tiled, g)
-            else:
-                def one_tile(ids, g_tile):
-                    local, _ = _tile_local_offsets(ids, m)
-                    return g_tile[ids] + local
-
-                pos = jax.vmap(one_tile)(ids_tiled, g)
-            return keys_tiled, vals_tiled, pos, pos
-
-        if pallas:
-            from repro.kernels import ops as kops
-
-            if self.radix is not None:
-                shift, bits = self.radix
-                if seg_tiled is not None:
-                    return kops.seg_radix_fused_postscan_reorder(
-                        keys_tiled, seg_tiled, g, vals_tiled, shift, bits, s,
-                        interpret=self._interpret(),
-                    )
-                return kops.radix_fused_postscan_reorder(
-                    keys_tiled, g, vals_tiled, shift, bits, interpret=self._interpret()
-                )
-            if seg_tiled is not None:
-                return kops.seg_fused_postscan_reorder(
-                    ids_tiled, seg_tiled, g, keys_tiled, vals_tiled, m, s,
-                    interpret=self._interpret(),
-                )
-            return kops.fused_postscan_reorder(
-                ids_tiled, g, keys_tiled, vals_tiled, m, interpret=self._interpret()
-            )
-
-        # vmap backend: the SAME fusion as the kernel — local ranks, tile
-        # starts, tile destination and global destination all from one
-        # one-hot/cumsum evaluation, then one gather-free scatter per array.
-        # Segmented tiles swap the one-hot/cumsum for its segmented-carry
-        # form + a scatter-add histogram, keeping the pass O(T·m) instead of
-        # O(T·s·m) (DESIGN.md §9).
-        def fused_tile(ids, segs, g_tile, keys_t, vals_t):
-            if segs is None:
-                local, hist = _tile_local_offsets(ids, m)
-                cid = ids
-            else:
-                local = _seg_tile_local(ids, segs, m)
-                cid = (segs * m + ids).astype(jnp.int32)
-                hist = jnp.zeros((m_eff,), jnp.int32).at[cid].add(1)
-            starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
-            dest = starts[cid] + local
-            pos = (g_tile[cid] + local).astype(jnp.int32)
-            keys_r = jnp.zeros_like(keys_t).at[dest].set(keys_t)
-            pos_r = jnp.zeros_like(pos).at[dest].set(pos)
-            if vals_t is None:
-                return keys_r, pos_r, pos
-            vals_r = jnp.zeros_like(vals_t).at[dest].set(vals_t)
-            return keys_r, vals_r, pos_r, pos
-
-        if seg_tiled is None:
-            if vals_tiled is None:
-                keys_r, pos_r, perm = jax.vmap(
-                    lambda i, gt, kt: fused_tile(i, None, gt, kt, None)
-                )(ids_tiled, g, keys_tiled)
-                return keys_r, None, pos_r, perm
-            keys_r, vals_r, pos_r, perm = jax.vmap(
-                lambda i, gt, kt, vt: fused_tile(i, None, gt, kt, vt)
-            )(ids_tiled, g, keys_tiled, vals_tiled)
-            return keys_r, vals_r, pos_r, perm
-        if vals_tiled is None:
-            keys_r, pos_r, perm = jax.vmap(
-                lambda i, sg, gt, kt: fused_tile(i, sg, gt, kt, None)
-            )(ids_tiled, seg_tiled, g, keys_tiled)
-            return keys_r, None, pos_r, perm
-        keys_r, vals_r, pos_r, perm = jax.vmap(fused_tile)(
-            ids_tiled, seg_tiled, g, keys_tiled, vals_tiled
-        )
-        return keys_r, vals_r, pos_r, perm
-
-    # -- layout-specific drivers -------------------------------------------
-    def _empty_result(self, keys: Array, values: Optional[Array]) -> MultisplitResult:
-        """n == 0: every output is empty/zero in the layout's shapes."""
-        m = self.num_buckets
-        if self.batch is not None:
-            shape_cm = (self.batch, m)
-            perm = jnp.zeros((self.batch, 0), jnp.int32)
-        elif self.segments is not None:
-            shape_cm = (self.segments, m)
-            perm = jnp.zeros((0,), jnp.int32)
-        else:
-            shape_cm = (m,)
-            perm = jnp.zeros((0,), jnp.int32)
-        zeros = jnp.zeros(shape_cm, jnp.int32)
-        return MultisplitResult(keys, values, zeros, zeros, perm)
-
-    def _pad_key(self, dtype) -> int:
-        """Fused-radix pad sentinel: all-ones key — digit m-1 in EVERY pass."""
-        return (1 << 32) - 1 if dtype == jnp.uint32 else -1
-
-    def _call_batched(self, keys: Array, values: Optional[Array]) -> MultisplitResult:
-        b, n, m = self.batch, self.n, self.num_buckets
-        if keys.shape != (b, n):
-            raise ValueError(f"batched plan resolved for shape {(b, n)}, got {keys.shape}")
-        if values is not None and values.shape != (b, n):
-            raise ValueError(
-                f"batched plans require values of shape {(b, n)}, got {values.shape}"
-            )
-        if n == 0:
-            return self._empty_result(keys, values)
-
-        if self.backend == "reference":
-            ids_fn = self._ids_fn()
-            solve = lambda k, v: _direct_solve_ids(k, ids_fn(k), m, v)
-            if values is None:
-                return jax.vmap(lambda k: solve(k, None))(keys)
-            return jax.vmap(solve)(keys, values)
-
-        if self.backend.startswith("pallas") and keys.dtype.itemsize != 4:
-            raise ValueError(
-                f"pallas backends require 32-bit keys (got {keys.dtype}); "
-                "use backend='vmap' for other widths"
-            )
-
-        fused_id = self.radix is not None and self.backend.startswith("pallas")
-        tile = self.tile
-        l_b = -(-n // tile)                       # tiles per batch row
-        n_row = l_b * tile
-
-        def pad_rows(x, fill):
-            if n_row == n:
-                return x
-            return jnp.pad(
-                x, ((0, 0), (0, n_row - n)), constant_values=jnp.asarray(fill, x.dtype)
-            )
-
-        # Per-row tiling: each tile belongs to exactly ONE batch row, so a
-        # single kernel grid of b*l_b programs covers the whole batch.
-        if fused_id:
-            keys_tiled = pad_rows(keys, self._pad_key(keys.dtype)).reshape(b * l_b, tile)
-            ids_tiled = None
-        else:
-            ids = self._ids_fn()(keys)
-            ids_tiled = pad_rows(ids, m - 1).reshape(b * l_b, tile)
-            keys_tiled = pad_rows(keys, 0).reshape(b * l_b, tile)
-        vals_tiled = None
-        if values is not None:
-            vals_tiled = pad_rows(values, 0).reshape(b * l_b, tile)
-
-        hist = self.prescan(keys_tiled, ids_tiled)               # (b*l_b, m)
-        # the global scan is PER ROW: each batch row is its own multisplit
-        g = jax.vmap(global_scan)(hist.reshape(b, l_b, m)).reshape(b * l_b, m)
-        src_keys, src_vals, pos, perm_tiled = self.postscan(g, keys_tiled, ids_tiled, vals_tiled)
-
-        pos_rows = pos.reshape(b, n_row)
-        scat = lambda p, src: jnp.zeros((n_row,), src.dtype).at[p].set(src)
-        keys_out = jax.vmap(scat)(pos_rows, src_keys.reshape(b, n_row))[:, :n]
-        values_out = None
-        if values is not None:
-            values_out = jax.vmap(scat)(pos_rows, src_vals.reshape(b, n_row))[:, :n]
-
-        counts = hist.reshape(b, l_b, m).sum(axis=1).astype(jnp.int32)
-        counts = counts.at[:, m - 1].add(n - n_row)              # drop pad sentinels
-        return MultisplitResult(
-            keys_out, values_out, _exclusive_rows(counts), counts,
-            perm_tiled.reshape(b, n_row)[:, :n],
-        )
-
-    # -- full pipeline -----------------------------------------------------
-    def __call__(
-        self,
-        keys: Array,
-        values: Optional[Array] = None,
-        segment_starts: Optional[Array] = None,
-    ) -> MultisplitResult:
-        if (values is not None) != self.key_value:
-            raise ValueError(
-                f"plan resolved for key_value={self.key_value} but called with "
-                f"values={'present' if values is not None else 'absent'}"
-            )
-        if self.segments is None and segment_starts is not None:
-            raise ValueError("plan is not segmented; segment_starts not accepted")
-
-        if self.batch is not None:
-            return self._call_batched(keys, values)
-
-        if keys.shape[0] != self.n:
-            raise ValueError(f"plan resolved for n={self.n}, got n={keys.shape[0]}")
-        m, s = self.num_buckets, self.segments
-        m_eff = self._m_eff()
-
-        seg_ids = None
-        if s is not None:
-            if segment_starts is None:
-                raise ValueError("segmented plan requires segment_starts")
-            segment_starts = jnp.asarray(segment_starts, jnp.int32)
-            if segment_starts.shape != (s,):
-                raise ValueError(
-                    f"plan resolved for {s} segments, got segment_starts shape "
-                    f"{segment_starts.shape}"
-                )
-            seg_ids = segment_ids_from_starts(segment_starts, self.n)
-
-        if self.n == 0:
-            return self._empty_result(keys, values)
-
-        if self.backend == "reference":
-            ids = self._ids_fn()(keys)
-            if s is None:
-                return _direct_solve_ids(keys, ids, m, values)
-            res = _direct_solve_ids(keys, (seg_ids * m + ids).astype(jnp.int32), m_eff, values)
-            counts = res.bucket_counts.reshape(s, m)
-            return MultisplitResult(
-                res.keys, res.values, _exclusive_rows(counts), counts,
-                res.permutation - segment_starts[seg_ids],
-            )
-
-        if self.backend.startswith("pallas") and keys.dtype.itemsize != 4:
-            raise ValueError(
-                f"pallas backends require 32-bit keys (got {keys.dtype}); "
-                "use backend='vmap' for other widths"
-            )
-
-        fused_id = self.radix is not None and self.backend.startswith("pallas")
-        n = self.n
-
-        # ---- tiling. Pads ride in (segment s-1,) bucket m-1 at the very
-        # tail, so they land after every real element and are sliced off
-        # below. For fused radix plans the pad key is all-ones: its digit is
-        # m-1 in EVERY pass.
-        if fused_id:
-            keys_p, _ = pad_to_tiles(keys, self.tile, self._pad_key(keys.dtype))
-            keys_tiled = keys_p.reshape(-1, self.tile)
-            ids_tiled = None
-        else:
-            ids = self._ids_fn()(keys)
-            ids_p, _ = pad_to_tiles(ids, self.tile, m - 1)
-            ids_tiled = ids_p.reshape(-1, self.tile)
-            keys_p, _ = pad_to_tiles(keys, self.tile, 0)
-            keys_tiled = keys_p.reshape(-1, self.tile)
-        seg_tiled = None
-        if s is not None:
-            seg_p, _ = pad_to_tiles(seg_ids, self.tile, s - 1)
-            seg_tiled = seg_p.reshape(-1, self.tile)
-        n_total = keys_tiled.size
-        vals_tiled = None
-        if values is not None:
-            vals_p, _ = pad_to_tiles(values, self.tile, 0)
-            vals_tiled = vals_p.reshape(-1, self.tile)
-
-        # ---- the three stages
-        hist = self.prescan(keys_tiled, ids_tiled, seg_tiled)
-        g = global_scan(hist)
-        src_keys, src_vals, pos, perm_tiled = self.postscan(
-            g, keys_tiled, ids_tiled, vals_tiled, seg_tiled
-        )
-
-        # ---- global scatter (contiguous per-bucket runs for wms/bms).
-        # For segmented plans the combined (seg, bucket)-major order IS the
-        # segment-concatenated per-segment bucket-major order, so the same
-        # flat scatter lands every segment in its input span.
-        scatter_pos = pos.reshape(-1)
-        keys_out = (
-            jnp.zeros((n_total,), keys.dtype).at[scatter_pos].set(src_keys.reshape(-1))[:n]
-        )
-        values_out = None
-        if values is not None:
-            values_out = (
-                jnp.zeros((n_total,) + values.shape[1:], values.dtype)
-                .at[scatter_pos]
-                .set(src_vals.reshape(-1))[:n]
-            )
-
-        counts = hist.sum(axis=0).astype(jnp.int32)
-        counts = counts.at[m_eff - 1].add(n - n_total)           # drop pad sentinels
-        perm = perm_tiled.reshape(-1)[:n]
-        if s is not None:
-            counts = counts.reshape(s, m)
-            return MultisplitResult(
-                keys_out, values_out, _exclusive_rows(counts), counts,
-                perm - segment_starts[seg_ids],                  # segment-LOCAL
-            )
-        starts = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
-        )
-        return MultisplitResult(keys_out, values_out, starts, counts, perm)
-
-
-def _direct_solve_ids(
-    keys: Array, ids: Array, m: int, values: Optional[Array]
-) -> MultisplitResult:
-    """O(n·m) direct evaluation of paper eq. (1) on precomputed bucket ids."""
-    if keys.shape[0] == 0:
-        zeros = jnp.zeros((m,), jnp.int32)
-        return MultisplitResult(keys, values, zeros, zeros, jnp.zeros((0,), jnp.int32))
-    local, hist = _tile_local_offsets(ids, m)
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)]
-    )
-    perm = starts[ids] + local
-    keys_out = jnp.zeros_like(keys).at[perm].set(keys)
-    values_out = None
-    if values is not None:
-        values_out = jnp.zeros_like(values).at[perm].set(values)
-    return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
-
-
-def _direct_solve_reference(
-    keys: Array, bucket_fn: BucketIdentifier, values: Optional[Array]
-) -> MultisplitResult:
-    """O(n·m) direct evaluation of paper eq. (1): the oracle backend."""
-    return _direct_solve_ids(keys, bucket_fn(keys), bucket_fn.num_buckets, values)
-
-
-def _validate_layout(batch: Optional[int], segments: Optional[int]) -> None:
-    if batch is not None and segments is not None:
-        raise ValueError("batch and segments are mutually exclusive plan layouts")
-    if batch is not None and batch < 1:
-        raise ValueError(f"batch must be >= 1, got {batch}")
-    if segments is not None and segments < 1:
-        raise ValueError(f"segments must be >= 1, got {segments}")
-
-
-def make_plan(
-    n: int,
-    num_buckets: int,
-    *,
-    method: str = "bms",
-    key_value: bool = False,
-    backend: str = "vmap",
-    tile: Optional[int] = None,
-    bucket_fn: Optional[BucketIdentifier] = None,
-    batch: Optional[int] = None,
-    segments: Optional[int] = None,
-) -> MultisplitPlan:
-    """Resolve (n, m, method, key-value-ness, backend) into a staged plan.
-
-    ``batch=b`` resolves a batched plan over ``(b, n)`` inputs; ``segments=s``
-    a segmented plan over flat ``(n,)`` inputs with an ``(s,)``
-    ``segment_starts`` call argument (mutually exclusive)."""
-    if method not in ("dms", "wms", "bms"):
-        raise ValueError(f"unknown multisplit method {method!r}")
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
-    _validate_layout(batch, segments)
-    m_eff = num_buckets * (segments or 1)
-    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
-    return MultisplitPlan(
-        n=n, num_buckets=num_buckets, method=method, key_value=key_value,
-        backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
-        batch=batch, segments=segments,
-    )
-
-
-def make_radix_plan(
-    n: int,
-    shift: int,
-    bits: int,
-    *,
-    method: str = "bms",
-    key_value: bool = False,
-    backend: str = "vmap",
-    tile: Optional[int] = None,
-    batch: Optional[int] = None,
-    segments: Optional[int] = None,
-) -> MultisplitPlan:
-    """A plan whose bucket identifier is the radix digit (shift, bits) —
-    fused into the kernels on pallas backends (no label array in HBM)."""
-    if method not in ("dms", "wms", "bms"):
-        raise ValueError(f"unknown multisplit method {method!r}")
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
-    _validate_layout(batch, segments)
-    m = 1 << bits
-    m_eff = m * (segments or 1)
-    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
-    return MultisplitPlan(
-        n=n, num_buckets=m, method=method, key_value=key_value,
-        backend=backend, tile=resolved_tile, radix=(shift, bits),
-        batch=batch, segments=segments,
-    )
-
-
-def make_batched_plan(batch: int, n: int, num_buckets: int, **kw) -> MultisplitPlan:
-    """Batched plan over ``(batch, n)`` inputs: one launch for all rows."""
-    return make_plan(n, num_buckets, batch=batch, **kw)
-
-
-def make_segmented_plan(n: int, num_segments: int, num_buckets: int, **kw) -> MultisplitPlan:
-    """Segmented plan over flat ``(n,)`` inputs with ``num_segments`` ragged
-    segments (call with ``segment_starts=``): one launch for all segments."""
-    return make_plan(n, num_buckets, segments=num_segments, **kw)
-
-
-def make_segmented_radix_plan(
-    n: int, num_segments: int, shift: int, bits: int, **kw
-) -> MultisplitPlan:
-    """Segmented radix plan: one fused digit pass over all segments."""
-    return make_radix_plan(n, shift, bits, segments=num_segments, **kw)
+from repro.core.pipeline.radix import RadixPipeline, radix_passes
+from repro.core.pipeline.registry import (
+    BACKENDS,
+    Backend,
+    available_backends,
+    backend_names,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from repro.core.pipeline.spec import (
+    MODES,
+    MultisplitPlan,
+    PipelineSpec,
+    Stage,
+    make_batched_plan,
+    make_plan,
+    make_radix_plan,
+    make_segmented_plan,
+    make_segmented_radix_plan,
+)
+from repro.core.pipeline.stages import (
+    MultisplitResult,
+    direct_counts,
+    exclusive_rows,
+    global_scan,
+    pad_rows,
+    pad_to_tiles,
+    segment_ids_from_starts,
+    tile_local_offsets,
+)
+from repro.core.pipeline.stages import direct_solve_ids as _direct_solve_ids
+from repro.core.pipeline.stages import direct_solve_reference as _direct_solve_reference
+from repro.core.pipeline.stages import exclusive_rows as _exclusive_rows
+from repro.core.pipeline.stages import seg_tile_local as _seg_tile_local
+from repro.core.pipeline.stages import tile_local_offsets as _tile_local_offsets
+from repro.core.pipeline.tiles import (
+    _MIN_TILE,
+    _TILE_CACHE,
+    _VMEM_BUDGET_BYTES,
+    BMS_TILE,
+    WMS_TILE,
+    _heuristic_tile,
+    autotune_tile,
+    clear_tile_cache,
+    resolve_tile,
+)
+
+__all__ = [
+    "BACKENDS", "BMS_TILE", "MODES", "MultisplitPlan", "MultisplitResult",
+    "PipelineSpec", "RadixPipeline", "Stage", "WMS_TILE", "autotune_tile",
+    "available_backends", "backend_names", "clear_tile_cache",
+    "direct_counts", "exclusive_rows", "get_backend", "global_scan",
+    "make_batched_plan", "make_plan", "make_radix_plan",
+    "make_segmented_plan", "make_segmented_radix_plan", "pad_rows",
+    "pad_to_tiles", "radix_passes", "register_backend", "resolve_backend",
+    "resolve_tile", "segment_ids_from_starts", "tile_local_offsets",
+]

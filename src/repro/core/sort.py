@@ -2,7 +2,14 @@
 
 * ``radix_sort``           — LSD radix sort built from iterated multisplit
                              with identity-bit buckets ``f_k``; the paper's
-                             "multisplit-sort".
+                             "multisplit-sort". Executes as a CHAINED
+                             :class:`~repro.core.pipeline.radix.RadixPipeline`
+                             (DESIGN.md §10): tiles resolved once, buffers
+                             padded once, ping-pong across digit passes.
+* ``radix_sort_per_pass``  — the PR-2 execution (one full plan round trip —
+                             pad, tile, run, slice — per digit pass). Kept
+                             verbatim as the chained-vs-per-pass benchmark
+                             baseline and bitwise-equivalence witness.
 * ``rb_sort_multisplit``   — the paper's *reduced-bit sort* baseline (§3.4):
                              multisplit implemented by sorting ⌈log m⌉-bit
                              labels with the platform sort primitive
@@ -14,15 +21,20 @@
 
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import multisplit as ms
-from repro.core.identifiers import BucketIdentifier, radix_buckets
-from repro.core.plan import make_radix_plan, make_segmented_radix_plan, resolve_backend
+from repro.core.identifiers import BucketIdentifier
+from repro.core.pipeline import (
+    RadixPipeline,
+    make_radix_plan,
+    make_segmented_radix_plan,
+    radix_passes,
+    resolve_backend,
+)
 
 Array = jnp.ndarray
 
@@ -44,39 +56,35 @@ def radix_sort(
     Stable. ``radix_bits=8`` means each pass is a 256-bucket multisplit —
     the paper's large-m regime; Table 8 sweeps r in [4, 8].
 
-    Every pass runs through a radix :class:`~repro.core.plan.MultisplitPlan`:
-    on pallas backends the digit ``f_k(u) = (u >> k·r) & (2^r − 1)`` is
+    Executes as ONE chained :class:`~repro.core.pipeline.radix.RadixPipeline`
+    (DESIGN.md §10): tiles are resolved once, the keys/values buffers are
+    padded once with the all-ones sentinel (digit m−1 in every pass) and
+    stay resident across all digit passes — no per-pass re-pad/re-tile/slice.
+    On kernel backends the digit ``f_k(u) = (u >> k·r) & (2^r − 1)`` is
     extracted INSIDE the fused kernels, so no label array is ever
     materialized host-side — the §3.4 RB-sort overhead the paper's
     multisplit-sort avoids (DESIGN.md §5).
 
     2-D ``(b, n)`` keys sort every row independently through BATCHED radix
     plans (DESIGN.md §9): still one kernel launch per pass, covering all
-    rows.
+    rows. Bitwise identical to :func:`radix_sort_per_pass`.
     """
     resolved = resolve_backend(use_pallas, interpret, backend)
     if keys.ndim == 2:
         batch, n = keys.shape
     else:
         batch, n = None, keys.shape[0]
-    n_pass = math.ceil(key_bits / radix_bits)
-    for k in range(n_pass):
-        # Final pass may cover fewer bits (e.g. r=7: 4 passes of 7 + one of 4).
-        bits = min(radix_bits, key_bits - k * radix_bits)
-        plan = make_radix_plan(
-            n,
-            k * radix_bits,
-            bits,
-            method=method,
-            key_value=values is not None,
-            backend=resolved,
-            tile=tile,
-            batch=batch,
-        )
-        res = plan(keys, values)
-        keys = res.keys
-        values = res.values
-    return keys, values
+    pipe = RadixPipeline(
+        n,
+        radix_bits=radix_bits,
+        key_bits=key_bits,
+        method=method,
+        key_value=values is not None,
+        backend=resolved,
+        tile=tile,
+        batch=batch,
+    )
+    return pipe(keys, values)
 
 
 def segmented_radix_sort(
@@ -93,34 +101,73 @@ def segmented_radix_sort(
     tile: Optional[int] = None,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort every ragged segment of flat uint32 ``keys`` independently, in
-    ONE sequence of ⌈key_bits/radix_bits⌉ segmented multisplit passes
-    (DESIGN.md §9) — not one pass sequence per segment.
+    ONE chained sequence of ⌈key_bits/radix_bits⌉ segmented multisplit
+    passes (DESIGN.md §9/§10) — not one pass sequence per segment.
 
     ``segment_starts`` is the (s,) ascending start-offset vector of
-    :func:`repro.core.multisplit.segmented_multisplit`. Each pass routes
-    through a segmented radix plan whose kernels combine the segment id with
-    the digit in-register; segment membership is invariant across passes
-    (elements never cross segment boundaries), so one ``segment_starts``
-    drives all passes. Stable; bitwise identical to slicing out each segment
-    and running :func:`radix_sort` on it.
+    :func:`repro.core.multisplit.segmented_multisplit`. Segment membership
+    is invariant across passes (elements never cross segment boundaries), so
+    the chained pipeline computes the position-keyed segment buffer once and
+    keeps it — with the padded keys/values — resident for all passes.
+    Stable; bitwise identical to slicing out each segment and running
+    :func:`radix_sort` on it.
     """
     resolved = resolve_backend(use_pallas, interpret, backend)
     seg = jnp.asarray(segment_starts, jnp.int32)
-    s = int(seg.shape[0])
-    n_pass = math.ceil(key_bits / radix_bits)
-    for k in range(n_pass):
-        bits = min(radix_bits, key_bits - k * radix_bits)
-        plan = make_segmented_radix_plan(
-            keys.shape[0],
-            s,
-            k * radix_bits,
-            bits,
-            method=method,
-            key_value=values is not None,
-            backend=resolved,
-            tile=tile,
-        )
-        res = plan(keys, values, segment_starts=seg)
+    pipe = RadixPipeline(
+        keys.shape[0],
+        radix_bits=radix_bits,
+        key_bits=key_bits,
+        method=method,
+        key_value=values is not None,
+        backend=resolved,
+        tile=tile,
+        segments=int(seg.shape[0]),
+    )
+    return pipe(keys, values, segment_starts=seg)
+
+
+def radix_sort_per_pass(
+    keys: Array,
+    values: Optional[Array] = None,
+    *,
+    radix_bits: int = 8,
+    key_bits: int = 32,
+    method: str = "bms",
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    segment_starts=None,
+) -> Tuple[Array, Optional[Array]]:
+    """The PR-2 radix sort: one full plan round trip PER digit pass.
+
+    Every pass re-resolves a plan and re-enters the generic pipeline front
+    door, which re-pads the (already pad-free) buffers to a tile multiple,
+    re-tiles them, and slices the tail back off — ⌈key_bits/r⌉ times. Kept
+    verbatim as the benchmark baseline for the chained
+    :class:`~repro.core.pipeline.radix.RadixPipeline` (which pads/tiles
+    exactly once) and as its bitwise-equivalence witness in the tests.
+    Handles the same flat / batched / segmented layouts.
+    """
+    if keys.ndim == 2:
+        batch, n = keys.shape
+    else:
+        batch, n = None, keys.shape[0]
+    seg = None
+    if segment_starts is not None:
+        seg = jnp.asarray(segment_starts, jnp.int32)
+    for shift, bits in radix_passes(radix_bits, key_bits):
+        if seg is not None:
+            plan = make_segmented_radix_plan(
+                n, int(seg.shape[0]), shift, bits, method=method,
+                key_value=values is not None, backend=backend, tile=tile,
+            )
+            res = plan(keys, values, segment_starts=seg)
+        else:
+            plan = make_radix_plan(
+                n, shift, bits, method=method, key_value=values is not None,
+                backend=backend, tile=tile, batch=batch,
+            )
+            res = plan(keys, values)
         keys = res.keys
         values = res.values
     return keys, values

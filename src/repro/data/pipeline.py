@@ -7,6 +7,12 @@ documents are packed into fixed (batch, seq) windows after being
 length-bucketed — the bucketing is a multisplit (buckets = length ranges),
 which is the paper's technique applied to the input pipeline (DESIGN.md §4).
 
+The bucketing runs DEVICE-SIDE as a segmented counts+positions pipeline
+(DESIGN.md §10): one ``positions_only`` plan call buckets the length vectors
+of MANY prefetch steps at once (one ragged segment per step) and only the
+int32 permutation + per-step bucket counts come back to the host — the
+reordered length array is never materialized anywhere.
+
 Synthetic text: a mixture of Zipf-distributed unigrams with doc-level topic
 drift — enough structure that a LM's loss meaningfully decreases.
 """
@@ -15,12 +21,12 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
 from repro.core.identifiers import range_buckets
-from repro.core.multisplit import multisplit
+from repro.core.pipeline import make_plan
 
 import jax.numpy as jnp
 
@@ -64,12 +70,35 @@ class DataPipeline:
         return docs, lengths
 
     # -- multisplit length bucketing (the paper's primitive in the pipeline) -
-    def _bucket_and_pack(self, docs, lengths):
-        splitters = jnp.asarray(self.bucket_lengths[:-1], jnp.int32)
-        bf = range_buckets(splitters)
-        order = multisplit(jnp.asarray(lengths, jnp.int32), bf,
-                           jnp.arange(len(docs), dtype=jnp.int32)).values
-        order = np.asarray(order)
+    def _bucket_orders(self, lengths_list) -> List[np.ndarray]:
+        """Bucket-major doc order for MANY steps in ONE device launch.
+
+        ``lengths_list`` holds one per-step length vector; the concatenation
+        is one segmented ``positions_only`` pipeline call (segment = step).
+        Only the segment-local eq. (2) permutation comes back host-side —
+        ``order[perm[i]] = i`` inverts it into the stable bucket-major doc
+        visit order per step (bitwise what the old per-step full-reorder
+        multisplit produced, without materializing any reordered array).
+        """
+        bf = range_buckets(jnp.asarray(self.bucket_lengths[:-1], jnp.int32))
+        sizes = [len(ln) for ln in lengths_list]
+        flat = np.concatenate([np.asarray(ln, np.int32) for ln in lengths_list])
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+        plan = make_plan(
+            int(flat.shape[0]), bf.num_buckets, method="dms", backend="vmap",
+            bucket_fn=bf, segments=len(sizes), mode="positions_only",
+        )
+        perm = np.asarray(
+            plan(jnp.asarray(flat), segment_starts=jnp.asarray(starts)).permutation
+        )
+        orders = []
+        for a, sz in zip(starts, sizes):
+            order = np.empty(sz, np.int64)
+            order[perm[a : a + sz]] = np.arange(sz)
+            orders.append(order)
+        return orders
+
+    def _pack(self, docs, order) -> np.ndarray:
         # pack bucket-ordered docs (similar lengths adjacent => little padding)
         out = np.zeros((self.batch, self.seq_len), np.int32)
         row, col = 0, 0
@@ -86,11 +115,7 @@ class DataPipeline:
                 break
         return out
 
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        """Deterministic batch for a global step (restart-safe)."""
-        n_docs = self.batch * max(self.seq_len // 256, 4)
-        docs, lengths = self._docs(step, n_docs)
-        tokens = self._bucket_and_pack(docs, lengths)
+    def _finalize(self, step: int, tokens: np.ndarray) -> Dict[str, np.ndarray]:
         labels = np.concatenate(
             [tokens[:, 1:], np.full((self.batch, 1), -1, np.int32)], axis=1
         )
@@ -104,18 +129,43 @@ class DataPipeline:
             del batch["tokens"]
         return batch
 
+    def batches_at(self, start_step: int, num_steps: int) -> List[Dict[str, np.ndarray]]:
+        """Deterministic batches for ``num_steps`` consecutive steps, with the
+        length bucketing of ALL steps done in one segmented pipeline launch.
+        ``batches_at(s, k)[i]`` is bitwise identical to ``batch_at(s + i)``
+        (segmented == independent flat plans, DESIGN.md §9)."""
+        n_docs = self.batch * max(self.seq_len // 256, 4)
+        per_step = [self._docs(start_step + i, n_docs) for i in range(num_steps)]
+        orders = self._bucket_orders([lengths for _, lengths in per_step])
+        return [
+            self._finalize(start_step + i, self._pack(docs, order))
+            for i, ((docs, _), order) in enumerate(zip(per_step, orders))
+        ]
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for a global step (restart-safe)."""
+        return self.batches_at(step, 1)[0]
+
 
 def make_batch_iterator(pipeline: DataPipeline, start_step: int = 0, prefetch: int = 2
                         ) -> Iterator[Dict[str, np.ndarray]]:
-    """Background-thread prefetching iterator, resumable at ``start_step``."""
+    """Background-thread prefetching iterator, resumable at ``start_step``.
+
+    The worker generates ``prefetch`` steps at a time through
+    :meth:`DataPipeline.batches_at`, so the length bucketing of a whole
+    prefetch window is one segmented pipeline launch."""
     q: "queue.Queue" = queue.Queue(maxsize=prefetch)
     stop = threading.Event()
+    chunk = max(prefetch, 1)
 
     def worker():
         step = start_step
         while not stop.is_set():
-            q.put(pipeline.batch_at(step))
-            step += 1
+            for batch in pipeline.batches_at(step, chunk):
+                q.put(batch)
+                if stop.is_set():
+                    return
+            step += chunk
 
     t = threading.Thread(target=worker, daemon=True)
     t.start()

@@ -30,7 +30,6 @@ import jax.numpy as jnp
 
 from repro.compat import get_abstract_mesh
 from repro.configs.base import ModelConfig
-from repro.core import multisplit as ms
 from repro.models.layers import apply_norm, mlp_block, mlp_decl, norm_decl
 from repro.parallel.sharding import ParamDecl, constrain as _constrain
 
@@ -71,14 +70,51 @@ def _router(p, xn: Array, cfg: ModelConfig):
     probs = jax.nn.softmax(logits, axis=-1)
     gates, experts = jax.lax.top_k(probs, cfg.moe.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
-    # Switch-style load-balance loss + z-loss
+    # Switch-style load-balance loss + z-loss. The top-1 dispatch fraction ce
+    # is a counts_only pipeline (the §7.3 histogram applied to routing) —
+    # exact integer counts, gradient-free like the one-hot mean it replaces.
     e = cfg.moe.num_experts
     me = probs.mean(0)
-    one_hot = jax.nn.one_hot(experts[:, 0], e)
-    ce = one_hot.mean(0)
+    counts, _ = expert_load_stats(experts[:, 0], e)
+    ce = counts.astype(jnp.float32) / experts.shape[0]
     lb = e * jnp.sum(me * ce)
     z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
     return gates, experts, lb, z
+
+
+def expert_load_stats(
+    expert_ids: Array,
+    num_experts: int,
+    capacity: Optional[int] = None,
+    segment_starts: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Per-expert token load via a ``counts_only`` pipeline (DESIGN.md §10):
+    {prescan, tree-reduce}, no scan and no permutation — the §7.3 histogram
+    machinery pointed at the router output.
+
+    Returns ``(counts, overflow_fraction)``: ``counts`` is the (e,) — or
+    (s, e) with ``segment_starts`` — expert histogram, and
+    ``overflow_fraction`` the fraction of tokens beyond ``capacity`` per
+    expert (0.0 when ``capacity`` is None), i.e. the drop rate a
+    capacity-bounded dispatch of these assignments would incur.
+    """
+    from repro.core.identifiers import identity_buckets
+    from repro.core.pipeline import make_plan
+
+    n = expert_ids.shape[0]
+    tile = min(DISPATCH_TILE, max(int(n), 1))
+    seg = None if segment_starts is None else jnp.asarray(segment_starts, jnp.int32)
+    plan = make_plan(
+        n, num_experts, method="dms", backend="vmap", tile=tile,
+        bucket_fn=identity_buckets(num_experts),
+        segments=None if seg is None else int(seg.shape[0]),
+        mode="counts_only",
+    )
+    counts = plan(expert_ids, segment_starts=seg).bucket_counts
+    if capacity is None or n == 0:
+        return counts, jnp.zeros((), jnp.float32)
+    dropped = jnp.maximum(counts - capacity, 0).sum()
+    return counts, dropped.astype(jnp.float32) / n
 
 
 def _ranks_multisplit(
@@ -86,22 +122,24 @@ def _ranks_multisplit(
 ) -> Tuple[Array, Array]:
     """Stable rank of each virtual token within its expert + expert counts.
 
-    THE paper technique, executed as ONE multisplit plan call (DMS: the
-    positions-only pipeline — prescan, one global scan, postscan; no
-    reorder). With ``segment_starts`` the call is a single SEGMENTED
+    THE paper technique, executed as ONE ``positions_only`` pipeline call
+    (DESIGN.md §10: prescan, one global scan, postscan positions — the
+    reordered-keys stage never runs, and nothing but the eq. (2) permutation
+    is materialized). With ``segment_starts`` the call is a single SEGMENTED
     multisplit (DESIGN.md §9): ranks restart per segment and ``counts`` is
     the (s, e) per-segment expert histogram — per-request routing in one
     launch instead of a host loop over requests.
     """
     from repro.core.identifiers import identity_buckets
-    from repro.core.plan import make_plan
+    from repro.core.pipeline import make_plan
 
     n = expert_ids.shape[0]
     bf = identity_buckets(num_experts)
     tile = min(DISPATCH_TILE, max(int(n), 1))
     if segment_starts is None:
         plan = make_plan(
-            n, num_experts, method="dms", backend="vmap", tile=tile, bucket_fn=bf
+            n, num_experts, method="dms", backend="vmap", tile=tile, bucket_fn=bf,
+            mode="positions_only",
         )
         res = plan(expert_ids)
         ranks = res.permutation - res.bucket_starts[expert_ids]
@@ -115,16 +153,17 @@ def _ranks_multisplit(
 def _segmented_ranks(
     expert_ids: Array, seg: Array, num_experts: int, tile: int
 ) -> Tuple[Array, Array, Array]:
-    """One segmented multisplit call -> (ranks, (s, e) counts, seg_ids);
-    the derived per-token segment id is returned so hot-path callers don't
-    recompute the searchsorted."""
+    """One segmented ``positions_only`` pipeline call -> (ranks, (s, e)
+    counts, seg_ids); the derived per-token segment id is returned so
+    hot-path callers don't recompute the searchsorted."""
     from repro.core.identifiers import identity_buckets
-    from repro.core.plan import make_plan, segment_ids_from_starts
+    from repro.core.pipeline import make_plan, segment_ids_from_starts
 
     n = expert_ids.shape[0]
     plan = make_plan(
         n, num_experts, method="dms", backend="vmap", tile=tile,
         bucket_fn=identity_buckets(num_experts), segments=int(seg.shape[0]),
+        mode="positions_only",
     )
     res = plan(expert_ids, segment_starts=seg)
     seg_ids = segment_ids_from_starts(seg, n)

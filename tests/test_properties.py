@@ -168,6 +168,94 @@ def test_segmented_matches_independent_segments(lengths, m, method, backend, key
             np.testing.assert_array_equal(np.asarray(out.values[a:e]), np.asarray(ref.values))
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(0, 700),
+    m=st.integers(1, 24),
+    method=st.sampled_from(METHODS),
+    backend=st.sampled_from(ALL_BACKENDS),
+    seed=st.integers(0, 2**16),
+)
+def test_counts_and_positions_only_match_full_flat(n, m, method, backend, seed):
+    """Partial-pipeline invariants (DESIGN.md §10): counts_only returns the
+    full pipeline's counts/starts bitwise (and nothing else); the
+    positions_only permutation applied host-side reproduces the fused
+    reorder — on every CPU-testable backend."""
+    keys = _keys(n, seed)
+    bf = delta_buckets(m, 2**30)
+    full = multisplit(keys, bf, method=method, tile=128, backend=backend)
+
+    co = multisplit(keys, bf, method=method, tile=128, backend=backend,
+                    mode="counts_only")
+    assert co.keys is None and co.values is None and co.permutation is None
+    np.testing.assert_array_equal(np.asarray(co.bucket_counts), np.asarray(full.bucket_counts))
+    np.testing.assert_array_equal(np.asarray(co.bucket_starts), np.asarray(full.bucket_starts))
+
+    po = multisplit(keys, bf, method=method, tile=128, backend=backend,
+                    mode="positions_only")
+    assert po.keys is None and po.values is None
+    np.testing.assert_array_equal(np.asarray(po.permutation), np.asarray(full.permutation))
+    np.testing.assert_array_equal(np.asarray(po.bucket_counts), np.asarray(full.bucket_counts))
+    reordered = np.zeros(n, dtype=np.asarray(keys).dtype)
+    reordered[np.asarray(po.permutation)] = np.asarray(keys)   # host-side apply
+    np.testing.assert_array_equal(reordered, np.asarray(full.keys))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(0, 250),
+    m=st.integers(1, 16),
+    backend=st.sampled_from(ALL_BACKENDS),
+    seed=st.integers(0, 2**16),
+)
+def test_counts_and_positions_only_match_full_batched(b, n, m, backend, seed):
+    keys = _keys(b * n, seed).reshape(b, n)
+    bf = delta_buckets(m, 2**30)
+    full = batched_multisplit(keys, bf, tile=128, backend=backend)
+    co = batched_multisplit(keys, bf, tile=128, backend=backend, mode="counts_only")
+    assert co.keys is None and co.permutation is None
+    np.testing.assert_array_equal(np.asarray(co.bucket_counts), np.asarray(full.bucket_counts))
+    np.testing.assert_array_equal(np.asarray(co.bucket_starts), np.asarray(full.bucket_starts))
+    po = batched_multisplit(keys, bf, tile=128, backend=backend, mode="positions_only")
+    np.testing.assert_array_equal(np.asarray(po.permutation), np.asarray(full.permutation))
+    for i in range(b):
+        reordered = np.zeros(n, dtype=np.asarray(keys).dtype)
+        reordered[np.asarray(po.permutation[i])] = np.asarray(keys[i])
+        np.testing.assert_array_equal(reordered, np.asarray(full.keys[i]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    lengths=st.lists(st.integers(0, 150), min_size=1, max_size=5),
+    m=st.integers(1, 16),
+    backend=st.sampled_from(ALL_BACKENDS),
+    seed=st.integers(0, 2**16),
+)
+def test_counts_and_positions_only_match_full_segmented(lengths, m, backend, seed):
+    lengths = np.asarray(lengths, np.int64)
+    n = int(lengths.sum())
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]).astype(np.int32)
+    ends = np.concatenate([starts[1:], [n]])
+    keys = _keys(n, seed)
+    bf = delta_buckets(m, 2**30)
+    full = segmented_multisplit(keys, bf, starts, tile=128, backend=backend)
+    co = segmented_multisplit(keys, bf, starts, tile=128, backend=backend,
+                              mode="counts_only")
+    assert co.keys is None and co.permutation is None
+    np.testing.assert_array_equal(np.asarray(co.bucket_counts), np.asarray(full.bucket_counts))
+    np.testing.assert_array_equal(np.asarray(co.bucket_starts), np.asarray(full.bucket_starts))
+    po = segmented_multisplit(keys, bf, starts, tile=128, backend=backend,
+                              mode="positions_only")
+    np.testing.assert_array_equal(np.asarray(po.permutation), np.asarray(full.permutation))
+    keys_np = np.asarray(keys)
+    perm = np.asarray(po.permutation)
+    for a, e in zip(starts, ends):                 # segment-local host-side apply
+        reordered = np.zeros(e - a, dtype=keys_np.dtype)
+        reordered[perm[a:e]] = keys_np[a:e]
+        np.testing.assert_array_equal(reordered, np.asarray(full.keys[a:e]))
+
+
 @settings(max_examples=6, deadline=None)
 @given(
     lengths=st.lists(st.integers(0, 150), min_size=1, max_size=5),

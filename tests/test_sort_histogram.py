@@ -82,3 +82,43 @@ def test_histogram_range():
         np.asarray(keys), bins=np.concatenate([[-np.inf], np.asarray(splitters), [np.inf]])
     )
     np.testing.assert_array_equal(np.asarray(h), expect)
+
+
+# ---------------------------------------------------------------------------
+# Histogram edges (ISSUE 3 satellite: the counts_only migration must handle
+# the degenerate shapes the old private-_pad_to_tiles path special-cased)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_histogram_empty_input(use_pallas):
+    h = histogram_even(jnp.zeros((0,), jnp.float32), 0.0, 1.0, 8, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(h), np.zeros(8))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_histogram_single_bucket(use_pallas):
+    keys = jnp.asarray(np.random.RandomState(0).uniform(0, 9, 777).astype(np.float32))
+    h = histogram_even(keys, 0.0, 9.0, 1, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray([777]))
+
+
+@pytest.mark.parametrize("n", [1, 255, 257, 4096 + 37])
+def test_histogram_non_multiple_of_tile(n):
+    keys = jnp.asarray(np.random.RandomState(n).uniform(0, 32, n).astype(np.float32))
+    for use_pallas in (False, True):
+        h = histogram_even(keys, 0.0, 32.0, 8, tile=256, use_pallas=use_pallas)
+        expect, _ = np.histogram(np.asarray(keys), bins=8, range=(0, 32))
+        np.testing.assert_array_equal(np.asarray(h), expect)
+        assert int(h.sum()) == n
+
+
+def test_histogram_resolves_tile_through_shared_cache():
+    """The old code hardcoded HIST_TILE=4096 and reached into
+    ms._pad_to_tiles; now tile=None goes through resolve_tile and lands in
+    the shared per-shape cache."""
+    from repro.core.pipeline import tiles
+
+    tiles.clear_tile_cache()
+    keys = jnp.asarray(np.random.RandomState(2).uniform(0, 8, 20000).astype(np.float32))
+    histogram_even(keys, 0.0, 8.0, 8)
+    assert (20000, 8, "bms", False, "vmap") in tiles._TILE_CACHE
