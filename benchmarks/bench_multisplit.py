@@ -173,12 +173,78 @@ def run_batched_vs_host_loop(emit_json: bool = True):
     return results
 
 
+def run_fused_labels_vs_materialized(emit_json: bool = True):
+    """ISSUE 4 measurement: in-tile fused labels (hashable specs evaluated
+    inside the tile stage / kernels) vs the pre-PR-4 materialized-labels
+    execution, which the CallableSpec escape hatch still exercises — the
+    full n-sized int32 label array is computed, padded and carried through
+    the pipeline.  Flat multisplit at m∈{32,256} plus the chained radix
+    sort (BitfieldSpec digits, radix_bits∈{5,8} → m∈{32,256} per pass).
+    Appends a trajectory point to BENCH_multisplit.json."""
+    from repro import ops
+    from repro.core.pipeline import radix_passes
+
+    results = {}
+    keys = _keys()
+    vals = jnp.arange(N, dtype=jnp.int32)
+
+    for m in (32, 256):
+        spec = ops.delta_buckets(m, 2**30)
+        # identical math, forced through the materialized-labels path
+        opaque = ops.from_fn(spec.emit, m, name=f"opaque-delta{m}")
+        fused = jax.jit(lambda k, v, s=spec: ops.multisplit(k, s, v).keys)
+        mater = jax.jit(lambda k, v, s=opaque: ops.multisplit(k, s, v).keys)
+        t_f = bench(fused, keys, vals)
+        t_m = bench(mater, keys, vals)
+        tag = f"fused_labels/flat/m={m}"
+        results[f"{tag}/fused_mkeys_s"] = round(N / t_f / 1e6, 2)
+        results[f"{tag}/materialized_mkeys_s"] = round(N / t_m / 1e6, 2)
+        results[f"{tag}/speedup"] = round(t_m / t_f, 3)
+        row(f"multisplit/kv/{tag}/fused", t_f, f"{N / t_f / 1e6:.1f} Mkeys/s")
+        row(f"multisplit/kv/{tag}/materialized", t_m,
+            f"{N / t_m / 1e6:.1f} Mkeys/s ({t_m / t_f:.2f}x slower)")
+
+    for bits, m in ((5, 32), (8, 256)):
+        fused_sort = jax.jit(
+            lambda k, v, b=bits: ops.radix_sort(k, v, radix_bits=b)[0]
+        )
+
+        def materialized_sort(k, v, b=bits):
+            # per-pass digit as an opaque callable: labels materialize
+            from repro.core.multisplit import multisplit as core_multisplit
+
+            for shift, width in radix_passes(b, 32):
+                digit = ops.from_fn(
+                    ops.BitfieldSpec(shift, width).emit, 1 << width,
+                    name=f"opaque-radix{shift}",
+                )
+                res = core_multisplit(k, digit, v)
+                k, v = res.keys, res.values
+            return k
+
+        mater_sort = jax.jit(materialized_sort)
+        t_f = bench(fused_sort, keys, vals)
+        t_m = bench(mater_sort, keys, vals)
+        tag = f"fused_labels/radix/m={m}"
+        results[f"{tag}/fused_mkeys_s"] = round(N / t_f / 1e6, 2)
+        results[f"{tag}/materialized_mkeys_s"] = round(N / t_m / 1e6, 2)
+        results[f"{tag}/speedup"] = round(t_m / t_f, 3)
+        row(f"sort/kv/{tag}/fused", t_f, f"{N / t_f / 1e6:.1f} Mkeys/s")
+        row(f"sort/kv/{tag}/materialized", t_m,
+            f"{N / t_m / 1e6:.1f} Mkeys/s ({t_m / t_f:.2f}x slower)")
+
+    if emit_json:
+        append_trajectory(results, n=N, key_value=True)
+    return results
+
+
 def main():
     run(key_value=False)
     run(key_value=True)
     run_distributions()
     run_fused_vs_legacy()
     run_batched_vs_host_loop()
+    run_fused_labels_vs_materialized()
 
 
 if __name__ == "__main__":

@@ -1,58 +1,73 @@
-"""Quickstart: the multisplit primitive in 30 lines.
+"""Quickstart: the transform-native multisplit API (`repro.ops`) in 40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.identifiers import delta_buckets, from_fn
-from repro.core.multisplit import multisplit, segmented_multisplit
-from repro.core.sort import radix_sort
-from repro.core.histogram import histogram_even
+from repro import ops
 
 # --- 1. multisplit 256K keys into 32 equal-width buckets (paper §6 setup) ---
+# Specs are declarative, HASHABLE values: equal specs share one jit trace,
+# and on kernel backends their bucket function is evaluated in-register
+# inside the tile kernels (no label array ever exists).
 keys = jnp.asarray(np.random.RandomState(0).randint(0, 2**30, 1 << 18, dtype=np.uint32))
 values = jnp.arange(keys.shape[0], dtype=jnp.int32)           # payload
-bf = delta_buckets(32, 2**30)
+spec = ops.delta_buckets(32, 2**30)
 
-out = multisplit(keys, bf, values, method="bms")              # {local, global, local}
+out = ops.multisplit(keys, spec, values, method="bms")        # {local, global, local}
 print(f"bucket starts: {np.asarray(out.bucket_starts)[:6]} ...")
 print(f"bucket counts: {np.asarray(out.bucket_counts)[:6]} ...")
-assert bool((jnp.diff(bf(out.keys)) >= 0).all()), "bucket-contiguous"
+assert bool((jnp.diff(spec(out.keys)) >= 0).all()), "bucket-contiguous"
 
-# --- 2. a user-defined bucket function (keys need not be comparable) --------
-parity = from_fn(lambda u: (u & 1).astype(jnp.int32), 2, name="parity")
-evens_first = multisplit(keys, parity)
+# --- 2. spec zoo: splitters, radix digits, user escape hatch ----------------
+splitters = ops.range_buckets([1 << 20, 1 << 25, 1 << 28])    # sample-sort style
+print(f"range{splitters.num_buckets} counts:",
+      np.asarray(ops.histogram(keys, splitters)))
+parity = ops.from_fn(lambda u: (u & 1).astype(jnp.int32), 2, name="parity")
+evens_first = ops.multisplit(keys, parity)                    # CallableSpec: escape hatch
 print(f"evens: {int(evens_first.bucket_counts[0])}, odds: {int(evens_first.bucket_counts[1])}")
 
-# --- 3. multisplit-based radix sort (paper §7.1) ----------------------------
-sorted_keys, sorted_vals = radix_sort(keys, values, radix_bits=8)
-assert bool((jnp.diff(sorted_keys.astype(jnp.int64)) >= 0).all())
+# --- 3. transforms are first-class ------------------------------------------
+# vmap: one BATCHED plan launch for the whole stack (bitwise == per-row loop)
+stack = keys[: 8 * 4096].reshape(8, 4096)
+per_row_counts = jax.vmap(lambda k: ops.multisplit(k, spec).bucket_counts)(stack)
+print(f"vmap'd counts shape: {per_row_counts.shape}")         # (8, 32)
+
+# grad: the key-value multisplit is differentiable in the values — backward
+# is the inverse gather of the forward permutation
+v = jnp.asarray(np.random.RandomState(1).rand(4096).astype(np.float32))
+loss = lambda v: (ops.multisplit_key_value(keys[:4096], v, spec).values ** 2).sum()
+g = jax.grad(loss)(v)
+assert bool(jnp.allclose(g, 2 * v)), "permutation-equivariant gradient"
+print(f"grad through multisplit OK (|g| = {float(jnp.linalg.norm(g)):.2f})")
+
+# --- 4. multisplit-based radix sort (paper §7.1) ----------------------------
+# = chained BitfieldSpec passes, digits extracted inside the kernels
+sorted_keys, sorted_vals = ops.radix_sort(keys, values, radix_bits=8)
+assert bool((sorted_keys[1:] >= sorted_keys[:-1]).all())
 print(f"radix sort OK: first keys {np.asarray(sorted_keys[:4])}")
 
-# --- 4. segmented routing: many ragged multisplits in ONE call --------------
+# --- 5. segmented routing: many ragged multisplits in ONE call --------------
 # Four "requests" of different sizes share one flat buffer; each is bucketed
 # independently (per-request counts, per-request stability) in one launch —
 # the building block for batched serving (DESIGN.md §9).
 segment_starts = jnp.asarray([0, 50_000, 50_000, 180_000], jnp.int32)  # one empty
-seg = segmented_multisplit(keys, bf, segment_starts, values)
+seg = ops.segmented_multisplit(keys, spec, segment_starts, values)
 print(f"per-request bucket counts, shape {seg.bucket_counts.shape}:")
 print(f"  request 0 -> {np.asarray(seg.bucket_counts[0, :4])} ...")
 print(f"  request 1 (empty) -> {np.asarray(seg.bucket_counts[1, :4])} ...")
 assert int(seg.bucket_counts.sum()) == keys.shape[0]
-# each request's span is bucket-contiguous on its own
-ids0 = bf(seg.keys[:50_000])
+ids0 = spec(seg.keys[:50_000])
 assert bool((jnp.diff(ids0) >= 0).all()), "request 0 bucket-contiguous"
 
-# --- 5. device-wide histogram (paper §7.3): a counts_only partial pipeline --
-# histogram() runs {prescan, tree-reduce} only — no scan, no scatter — via
-# mode="counts_only" (DESIGN.md §10); the same partial pipeline is one call
-# away for ANY bucket identifier:
-h = histogram_even(keys.astype(jnp.float32), 0.0, float(2**30), 64)
+# --- 6. partial pipelines (paper §7.3): counts_only / positions_only --------
+h = ops.histogram(keys.astype(jnp.float32), ops.even_buckets(0.0, float(2**30), 64))
 print(f"histogram (64 even bins): min {int(h.min())}, max {int(h.max())}")
-counts = multisplit(keys, bf, mode="counts_only").bucket_counts
-assert int(counts.sum()) == keys.shape[0]
+counts = ops.multisplit(keys, spec, mode="counts_only").bucket_counts
 assert bool((counts == out.bucket_counts).all()), "counts_only == full pipeline"
-print(f"counts_only histogram over {bf.name}: {np.asarray(counts[:6])} ...")
+ranks = ops.multisplit(keys, spec, mode="positions_only").permutation
+assert int(ranks.shape[0]) == keys.shape[0]
 print("quickstart OK")

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.compat import shard_map as _shard_map
 from repro.core import multisplit as ms
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BucketSpec
 from repro.core.pipeline import MultisplitResult, make_plan, resolve_backend
 
 Array = jnp.ndarray
@@ -34,7 +34,7 @@ Array = jnp.ndarray
 
 def multisplit_all_shards(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     method: str = "bms",
@@ -109,7 +109,7 @@ def multisplit_all_shards(
 
 def _local_plan(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values,
     method: str,
     use_pallas: bool,
@@ -202,7 +202,7 @@ def _transport_dense_positions(buf, positions, in_off, send, axis_name):
 
 def multisplit_sharded(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     axis_name: str,
@@ -263,7 +263,7 @@ class BucketShardedResult(NamedTuple):
 
 def multisplit_bucket_sharded(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     axis_name: str,
@@ -360,7 +360,7 @@ def multisplit_bucket_sharded(
 
 
 def make_multisplit_sharded(
-    bucket_fn: BucketIdentifier, mesh, axis_name: str, key_value: bool = False, **kw
+    bucket_fn: BucketSpec, mesh, axis_name: str, key_value: bool = False, **kw
 ):
     """Convenience: wrap ``multisplit_sharded`` in shard_map over one axis."""
     from jax.sharding import PartitionSpec as P

@@ -18,7 +18,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.identifiers import BucketIdentifier, even_buckets, range_buckets
+from repro.core.identifiers import BucketSpec, even_buckets, range_buckets
 from repro.core.pipeline import make_plan, resolve_backend
 
 Array = jnp.ndarray
@@ -26,7 +26,7 @@ Array = jnp.ndarray
 
 def histogram(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     *,
     tile: Optional[int] = None,
     use_pallas: bool = False,

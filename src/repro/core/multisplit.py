@@ -35,6 +35,12 @@ Three variants map to the paper's three implementations:
 Beyond the paper's single flat problem, :func:`batched_multisplit` and
 :func:`segmented_multisplit` run MANY independent multisplits (per batch
 row / per ragged segment) in one plan launch (DESIGN.md §9).
+
+NOTE (PR-4): :mod:`repro.ops` is the STABLE public facade over this module
+— transform-native (``jax.vmap`` dispatches onto the batched plan, the
+key-value op is differentiable) and built on hashable
+:class:`~repro.core.identifiers.BucketSpec` values.  New consumers should
+import ``repro.ops``; this module remains the execution layer.
 """
 
 from __future__ import annotations
@@ -44,7 +50,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BucketSpec
 from repro.core.pipeline import (        # re-exported for consumers/tests
     BMS_TILE,
     MultisplitResult,
@@ -90,7 +96,7 @@ def tile_histogram(bucket_ids: Array, num_buckets: int) -> Array:
 
 def multisplit_ref(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
 ) -> MultisplitResult:
     """O(n·m) direct evaluation of eq. (1). Oracle for everything else."""
@@ -124,7 +130,7 @@ def postscan_positions(ids_tiled: Array, g: Array, num_buckets: int) -> Array:
 
 def multisplit(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     method: str = "bms",
@@ -170,7 +176,7 @@ def multisplit(
 
 def batched_multisplit(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     method: str = "bms",
@@ -203,7 +209,7 @@ def batched_multisplit(
 
 def segmented_multisplit(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     segment_starts,
     values: Optional[Array] = None,
     *,
@@ -248,7 +254,7 @@ def segmented_multisplit(
 
 def multisplit_unfused(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
     *,
     method: str = "bms",

@@ -146,13 +146,16 @@ class RadixPipeline:
             seg_p, _ = _st.pad_to_tiles(seg_ids, tile, self.segments - 1)
             seg_tiled = seg_p.reshape(-1, tile)
 
-        # ---- chained passes on resident buffers (reshape views are free)
+        # ---- chained passes on resident buffers (reshape views are free).
+        # On label-fusing backends each pass's BitfieldSpec digit is computed
+        # inside the tile stage (in-register in the kernels) — zero label
+        # traffic; only non-fusing backends materialize the digit strip.
         for plan in self.plans:
             keys_tiled = keys_pad.reshape(-1, tile)
             vals_tiled = vals_pad.reshape(-1, tile) if vals_pad is not None else None
             ids_tiled = None
-            if not plan.fused_radix():
-                ids_tiled = plan.ids_fn()(keys_pad).reshape(-1, tile)
+            if not plan.label_fusion(keys_pad):
+                ids_tiled = plan._host_labels(keys_pad).reshape(-1, tile)
             keys_pad, vals_pad, _, _ = plan.run_tiled(
                 keys_tiled, ids_tiled, vals_tiled, seg_tiled
             )
@@ -189,8 +192,8 @@ class RadixPipeline:
             keys_tiled = keys_pad.reshape(b * l_b, tile)
             vals_tiled = vals_pad.reshape(b * l_b, tile) if vals_pad is not None else None
             ids_tiled = None
-            if not plan.fused_radix():
-                ids_tiled = plan.ids_fn()(keys_pad).reshape(b * l_b, tile)
+            if not plan.label_fusion(keys_pad):
+                ids_tiled = plan._host_labels(keys_pad).reshape(b * l_b, tile)
             keys_pad, vals_pad, _, _ = plan.run_tiled(
                 keys_tiled, ids_tiled, vals_tiled, rows=b
             )

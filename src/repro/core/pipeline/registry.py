@@ -53,8 +53,13 @@ class StageImpl:
 class KernelStages(StageImpl):
     """Pallas kernel stages (interpreted on CPU or compiled for TPU).
 
-    One fused VMEM pass per tile; radix digits and segment ids ride inside
-    the kernels (DESIGN.md §4, §5, §9).
+    One fused VMEM pass per tile; segment ids ride inside the kernels
+    (DESIGN.md §4, §5, §9). ``ids_tiled is None`` selects the fused-label
+    path (DESIGN.md §11): bucket ids are computed IN-KERNEL from the plan's
+    hashable :class:`~repro.core.identifiers.BucketSpec` (the radix digit is
+    just ``BitfieldSpec``), so no label strip exists outside the kernel.
+    Only :class:`~repro.core.identifiers.CallableSpec` plans feed the
+    kernels precomputed ``ids_tiled``.
     """
 
     def __init__(self, interpret: bool):
@@ -64,14 +69,13 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
-        if spec.radix is not None:
-            shift, bits = spec.radix
+        if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
-                return kops.seg_radix_tile_histograms(
-                    keys_tiled, seg_tiled, shift, bits, s, interpret=self.interpret
+                return kops.seg_spec_tile_histograms(
+                    keys_tiled, seg_tiled, spec.bucket_fn, s, interpret=self.interpret
                 )
-            return kops.radix_tile_histograms(
-                keys_tiled, shift, bits, interpret=self.interpret
+            return kops.spec_tile_histograms(
+                keys_tiled, spec.bucket_fn, interpret=self.interpret
             )
         if seg_tiled is not None:
             return kops.seg_tile_histograms(
@@ -83,14 +87,14 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
-        if spec.radix is not None:
-            shift, bits = spec.radix
+        if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
-                return kops.seg_radix_tile_positions(
-                    keys_tiled, seg_tiled, g, shift, bits, s, interpret=self.interpret
+                return kops.seg_spec_tile_positions(
+                    keys_tiled, seg_tiled, g, spec.bucket_fn, s,
+                    interpret=self.interpret,
                 )
-            return kops.radix_tile_positions(
-                keys_tiled, g, shift, bits, interpret=self.interpret
+            return kops.spec_tile_positions(
+                keys_tiled, g, spec.bucket_fn, interpret=self.interpret
             )
         if seg_tiled is not None:
             return kops.seg_tile_positions(
@@ -102,15 +106,14 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
-        if spec.radix is not None:
-            shift, bits = spec.radix
+        if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
-                return kops.seg_radix_fused_postscan_reorder(
-                    keys_tiled, seg_tiled, g, vals_tiled, shift, bits, s,
+                return kops.seg_spec_fused_postscan_reorder(
+                    keys_tiled, seg_tiled, g, vals_tiled, spec.bucket_fn, s,
                     interpret=self.interpret,
                 )
-            return kops.radix_fused_postscan_reorder(
-                keys_tiled, g, vals_tiled, shift, bits, interpret=self.interpret
+            return kops.spec_fused_postscan_reorder(
+                keys_tiled, g, vals_tiled, spec.bucket_fn, interpret=self.interpret
             )
         if seg_tiled is not None:
             return kops.seg_fused_postscan_reorder(
@@ -128,10 +131,22 @@ class VmapStages(StageImpl):
     one-hot/cumsum evaluation per tile. Segmented tiles swap the one-hot for
     its segmented-carry form + a scatter-add histogram, keeping the pass
     O(T·m) instead of O(T·s·m) (DESIGN.md §9).
+
+    Fused-label plans (``ids_tiled is None``, DESIGN.md §11) derive the tile
+    label strip from ``spec.bucket_fn.emit`` INSIDE the vmapped stage — the
+    labels are an XLA-fused intermediate of the per-tile computation, never
+    a host/plan-layer array (bitwise identical to the ids path).
     """
+
+    @staticmethod
+    def _tile_ids(spec, keys_tiled, ids_tiled):
+        if ids_tiled is not None:
+            return ids_tiled
+        return jax.vmap(spec.bucket_fn.emit)(keys_tiled)
 
     def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
+        ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
             m_eff = spec.m_eff
             cid = (seg_tiled * m + ids_tiled).astype(jnp.int32)
@@ -144,6 +159,7 @@ class VmapStages(StageImpl):
 
     def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
+        ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
             def one_tile_seg(ids, segs, g_tile):
                 local = _st.seg_tile_local(ids, segs, m)
@@ -159,6 +175,7 @@ class VmapStages(StageImpl):
 
     def reorder(self, spec, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled):
         m, m_eff = spec.num_buckets, spec.m_eff
+        ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
 
         def fused_tile(ids, segs, g_tile, keys_t, vals_t):
             if segs is None:
@@ -204,9 +221,13 @@ class Backend:
     """A registered execution target for the pipeline stage graph.
 
     ``tiled=False`` marks a direct-solve backend (no tiling, no scan — the
-    O(n·m) oracle); ``stages`` is then unused. ``fuses_radix`` advertises
-    in-kernel digit extraction (no host label array); ``key_itemsize``
-    restricts key width (pallas kernels are 32-bit-lane programs).
+    O(n·m) oracle); ``stages`` is then unused. ``fuses_labels`` advertises
+    fused-label execution (DESIGN.md §11): any fusable
+    :class:`~repro.core.identifiers.BucketSpec` is evaluated inside the
+    backend's tile stage and never materialized as a plan-layer label array.
+    ``fuses_radix`` is the pre-PR-4 kernel-only flag (in-KERNEL digit
+    extraction), kept for introspection compat; ``key_itemsize`` restricts
+    key width (pallas kernels are 32-bit-lane programs).
     """
 
     name: str
@@ -215,6 +236,7 @@ class Backend:
     tiled: bool = True
     uses_kernels: bool = False
     fuses_radix: bool = False
+    fuses_labels: bool = False
     key_itemsize: Optional[int] = None
 
     def check_keys(self, keys: Array) -> None:
@@ -261,6 +283,7 @@ register_backend(Backend(
     name="vmap",
     description="tiled jnp stages, fused per-tile closure",
     stages=VmapStages(),
+    fuses_labels=True,
 ))
 register_backend(Backend(
     name="pallas-interpret",
@@ -268,6 +291,7 @@ register_backend(Backend(
     stages=KernelStages(interpret=True),
     uses_kernels=True,
     fuses_radix=True,
+    fuses_labels=True,
     key_itemsize=4,
 ))
 register_backend(Backend(
@@ -276,6 +300,7 @@ register_backend(Backend(
     stages=KernelStages(interpret=False),
     uses_kernels=True,
     fuses_radix=True,
+    fuses_labels=True,
     key_itemsize=4,
 ))
 

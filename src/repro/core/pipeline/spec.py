@@ -28,7 +28,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BitfieldSpec, BucketSpec, as_spec
 from repro.core.pipeline import stages as _st
 from repro.core.pipeline.registry import get_backend
 from repro.core.pipeline.stages import MultisplitResult
@@ -52,10 +52,19 @@ class Stage(NamedTuple):
 class PipelineSpec:
     """A declarative multisplit pipeline for one problem shape.
 
-    Frozen and hashable-by-identity: build via :func:`make_plan` /
-    :func:`make_radix_plan`. ``radix`` carries the (shift, bits) of a fused
-    digit identifier — on kernel backends bucket ids are then extracted
-    inside the kernels and never exist as a host/HBM array.
+    Frozen and hashable BY VALUE (since PR-4 ``bucket_fn`` holds a hashable
+    :class:`~repro.core.identifiers.BucketSpec`, so two plans resolved from
+    equal specs are equal — jit caches keyed on a plan never retrace across
+    identifier instances).  Build via :func:`make_plan` /
+    :func:`make_radix_plan`; the latter sets ``bucket_fn`` to the
+    :class:`~repro.core.identifiers.BitfieldSpec` digit.
+
+    Label fusion (DESIGN.md §11) is decided per call by
+    :meth:`label_fusion`: on fusing backends every fusable (non-callable)
+    spec is evaluated INSIDE the tile stage — in-register in the pallas
+    kernels — and the n-sized label array never exists.  Only
+    :class:`~repro.core.identifiers.CallableSpec` plans materialize labels,
+    through the single :meth:`_host_labels` door.
 
     ``batch``/``segments`` (mutually exclusive) select the batched or
     segmented layout (DESIGN.md §9): ``batch=b`` expects ``(b, n)`` inputs;
@@ -70,8 +79,7 @@ class PipelineSpec:
     key_value: bool
     backend: str
     tile: int
-    radix: Optional[Tuple[int, int]] = None        # (shift, bits)
-    bucket_fn: Optional[BucketIdentifier] = None
+    bucket_fn: Optional[BucketSpec] = None
     batch: Optional[int] = None                    # leading (b, n) axis
     segments: Optional[int] = None                 # ragged segments over (n,)
     mode: str = "reorder"
@@ -82,43 +90,82 @@ class PipelineSpec:
         """Width of the one-hot/scan: ``s*m`` for segmented plans, else m."""
         return self.num_buckets * (self.segments or 1)
 
-    def ids_fn(self) -> BucketIdentifier:
-        if self.bucket_fn is not None:
-            return self.bucket_fn
-        if self.radix is None:
-            raise ValueError("plan has neither bucket_fn nor radix spec")
-        shift, bits = self.radix
-        mask = (1 << bits) - 1
-        return BucketIdentifier(
-            lambda u: ((u.astype(jnp.uint32) >> jnp.uint32(shift)) & jnp.uint32(mask)).astype(jnp.int32),
-            1 << bits,
-            name=f"radix[{shift}:{shift + bits}]",
-        )
+    @property
+    def radix(self) -> Optional[Tuple[int, int]]:
+        """(shift, bits) when the spec is the radix digit, else None (the
+        pre-PR-4 introspection surface; the digit is just a BitfieldSpec)."""
+        if isinstance(self.bucket_fn, BitfieldSpec):
+            return (self.bucket_fn.shift, self.bucket_fn.bits)
+        return None
+
+    def ids_fn(self) -> BucketSpec:
+        if self.bucket_fn is None:
+            raise ValueError("plan has no bucket spec")
+        return self.bucket_fn
 
     def fused_radix(self) -> bool:
-        """True when the digit is extracted inside the kernels (no host ids)."""
+        """True when the digit is extracted inside the kernels (no host ids).
+        Pre-PR-4 introspection surface; :meth:`label_fusion` is the general
+        call-time decision."""
         return self.radix is not None and get_backend(self.backend).fuses_radix
 
-    def pad_key(self, dtype) -> int:
-        """Fused-radix pad sentinel: all-ones key — digit m-1 in EVERY pass,
-        so chained passes keep pads at the tail without re-padding."""
+    def label_fusion(self, keys: Array) -> bool:
+        """Whether THIS call computes bucket ids inside the tile stage
+        (DESIGN.md §11): requires a fusable (non-callable) spec, a
+        label-fusing tiled backend, and — on kernel backends — keys of the
+        kernel lane width.  When False the plan materializes labels through
+        :meth:`_host_labels` (the pre-PR-4 behavior, kept for CallableSpec
+        and off-width keys in partial modes)."""
+        bf = self.bucket_fn
+        if bf is None or not bf.fusable:
+            return False
+        be = get_backend(self.backend)
+        if not be.tiled or not be.fuses_labels:
+            return False
+        if be.key_itemsize is not None and keys.dtype.itemsize != be.key_itemsize:
+            return False
+        return True
+
+    def _host_labels(self, keys: Array) -> Array:
+        """THE single label-materialization door of the tiled layout stage.
+        Non-callable specs on fusing backends never pass through here
+        (monkeypatch-asserted in tests/test_ops_transforms.py)."""
+        return self.ids_fn()(keys)
+
+    def pad_key(self, dtype):
+        """Fused-label pad sentinel: a key whose bucket is m-1 (for the
+        radix BitfieldSpec: the all-ones key, digit m-1 in EVERY pass, so
+        chained passes keep pads at the tail without re-padding)."""
+        if self.bucket_fn is not None:
+            return self.bucket_fn.pad_key(dtype)
         return (1 << 32) - 1 if dtype == jnp.uint32 else -1
 
     # -- introspection -----------------------------------------------------
     def stages(self) -> Tuple[str, ...]:
-        """Human/test-readable pipeline description (``name:impl`` strings)."""
+        """Human/test-readable pipeline description (``name:impl`` strings).
+
+        Fused-label stages assume lane-width-compatible keys (the call-time
+        fallback for off-width keys in partial modes is not shape-visible
+        here); the radix BitfieldSpec keeps its historical ``radix-fused``
+        spelling."""
         be = get_backend(self.backend)
         kernel = be.uses_kernels
-        fused_id = self.radix is not None and be.fuses_radix
-        pre = ("prescan:radix-fused-kernel" if fused_id
+        fusable = (self.bucket_fn is not None and self.bucket_fn.fusable
+                   and be.fuses_labels)
+        fused_id = kernel and fusable
+        radix_id = fused_id and self.radix is not None
+        pre = ("prescan:radix-fused-kernel" if radix_id
+               else "prescan:fused-label-kernel" if fused_id
                else "prescan:kernel" if kernel else "prescan:vmap")
-        positions = ("postscan:radix-positions-kernel" if fused_id
+        positions = ("postscan:radix-positions-kernel" if radix_id
+                     else "postscan:fused-label-positions-kernel" if fused_id
                      else "postscan:positions-kernel" if kernel
                      else "postscan:positions-vmap")
         if self.method == "dms":
             post = positions
         else:
-            post = ("postscan:radix-fused-reorder-kernel" if fused_id
+            post = ("postscan:radix-fused-reorder-kernel" if radix_id
+                    else "postscan:fused-label-reorder-kernel" if fused_id
                     else "postscan:fused-reorder-kernel" if kernel
                     else "postscan:fused-reorder-vmap")
         if not be.tiled:
@@ -254,10 +301,11 @@ class MultisplitPlan(PipelineSpec):
         return MultisplitResult(keys, values, zeros, zeros, perm)
 
     def _check_key_width(self, keys: Array) -> None:
-        """Kernel backends are 32-bit-lane programs; keys only enter kernels
-        when the digit is fused or the pipeline reorders them — the partial
-        modes feed kernels nothing but int32 ids."""
-        if self.fused_radix() or self.mode == "reorder":
+        """Kernel backends are 32-bit-lane programs; keys unconditionally
+        enter kernels only when the pipeline reorders them. In the partial
+        modes, off-width keys simply disable label fusion (labels
+        materialize host-side and kernels see nothing but int32 ids)."""
+        if self.mode == "reorder":
             get_backend(self.backend).check_keys(keys)
 
     # -- batched driver ----------------------------------------------------
@@ -292,7 +340,7 @@ class MultisplitPlan(PipelineSpec):
             return res
 
         self._check_key_width(keys)
-        fused = self.fused_radix()
+        fused = self.label_fusion(keys)
         tile = self.tile
         l_b = -(-n // tile)                       # tiles per batch row
         n_row = l_b * tile
@@ -305,7 +353,7 @@ class MultisplitPlan(PipelineSpec):
             ).reshape(b * l_b, tile)
             ids_tiled = None
         else:
-            ids = self.ids_fn()(keys)
+            ids = self._host_labels(keys)
             ids_tiled = _st.pad_rows(ids, n_row, m - 1).reshape(b * l_b, tile)
             if self.mode != "reorder":
                 keys_tiled = None            # partial modes consume only ids
@@ -389,19 +437,20 @@ class MultisplitPlan(PipelineSpec):
             return self._call_direct(keys, values, seg_ids, segment_starts)
 
         self._check_key_width(keys)
-        fused = self.fused_radix()
+        fused = self.label_fusion(keys)
         n = self.n
 
         # ---- layout stage. Pads ride in (segment s-1,) bucket m-1 at the
         # very tail, so they land after every real element and are sliced off
-        # below. For fused radix plans the pad key is all-ones: its digit is
-        # m-1 in EVERY pass.
+        # below. Fused-label plans pad with the spec's pad key (bucket m-1 by
+        # construction; for the radix digit: the all-ones key, digit m-1 in
+        # EVERY pass).
         if fused:
             keys_p, _ = _st.pad_to_tiles(keys, self.tile, self.pad_key(keys.dtype))
             keys_tiled = keys_p.reshape(-1, self.tile)
             ids_tiled = None
         else:
-            ids = self.ids_fn()(keys)
+            ids = self._host_labels(keys)
             ids_p, _ = _st.pad_to_tiles(ids, self.tile, m - 1)
             ids_tiled = ids_p.reshape(-1, self.tile)
             if self.mode != "reorder":
@@ -523,7 +572,7 @@ def make_plan(
     key_value: bool = False,
     backend: str = "vmap",
     tile: Optional[int] = None,
-    bucket_fn: Optional[BucketIdentifier] = None,
+    bucket_fn: Optional[BucketSpec] = None,
     batch: Optional[int] = None,
     segments: Optional[int] = None,
     mode: str = "reorder",
@@ -531,13 +580,18 @@ def make_plan(
     """Resolve (n, m, method, key-value-ness, backend, mode) into a staged
     plan.
 
-    ``batch=b`` resolves a batched plan over ``(b, n)`` inputs; ``segments=s``
-    a segmented plan over flat ``(n,)`` inputs with an ``(s,)``
+    ``bucket_fn`` is a :class:`~repro.core.identifiers.BucketSpec` (the
+    :class:`~repro.core.identifiers.BucketIdentifier` shim is one); fusable
+    specs run label-fused on fusing backends (DESIGN.md §11).  ``batch=b``
+    resolves a batched plan over ``(b, n)`` inputs; ``segments=s`` a
+    segmented plan over flat ``(n,)`` inputs with an ``(s,)``
     ``segment_starts`` call argument (mutually exclusive). ``mode`` selects a
     partial pipeline (``counts_only`` / ``positions_only``) or the full
     reorder (module docstring)."""
     _validate_common(method, backend, mode, key_value)
     _validate_layout(batch, segments)
+    if bucket_fn is not None:
+        bucket_fn = as_spec(bucket_fn)
     m_eff = num_buckets * (segments or 1)
     resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
     return MultisplitPlan(
@@ -560,17 +614,14 @@ def make_radix_plan(
     segments: Optional[int] = None,
     mode: str = "reorder",
 ) -> MultisplitPlan:
-    """A plan whose bucket identifier is the radix digit (shift, bits) —
-    fused into the kernels on kernel backends (no label array in HBM)."""
-    _validate_common(method, backend, mode, key_value)
-    _validate_layout(batch, segments)
-    m = 1 << bits
-    m_eff = m * (segments or 1)
-    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
-    return MultisplitPlan(
-        n=n, num_buckets=m, method=method, key_value=key_value,
-        backend=backend, tile=resolved_tile, radix=(shift, bits),
-        batch=batch, segments=segments, mode=mode,
+    """A plan whose bucket spec is the radix digit
+    :class:`~repro.core.identifiers.BitfieldSpec`(shift, bits) — label-fused
+    into the tile stage on fusing backends (in-register in the kernels; no
+    label array anywhere)."""
+    return make_plan(
+        n, 1 << bits, method=method, key_value=key_value, backend=backend,
+        tile=tile, bucket_fn=BitfieldSpec(shift, bits), batch=batch,
+        segments=segments, mode=mode,
     )
 
 

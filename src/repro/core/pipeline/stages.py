@@ -21,7 +21,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BucketSpec
 
 Array = jnp.ndarray
 
@@ -148,7 +148,7 @@ def direct_solve_ids(
 
 
 def direct_solve_reference(
-    keys: Array, bucket_fn: BucketIdentifier, values: Optional[Array]
+    keys: Array, bucket_fn: BucketSpec, values: Optional[Array]
 ) -> MultisplitResult:
     """O(n·m) direct evaluation of paper eq. (1): the oracle backend."""
     return direct_solve_ids(keys, bucket_fn(keys), bucket_fn.num_buckets, values)

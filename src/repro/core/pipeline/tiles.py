@@ -16,7 +16,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BucketSpec
 from repro.kernels.common import pad_lanes as _pad_lanes
 
 # "warp" tiles vs "block" tiles (paper Table 1 sizing knob).
@@ -53,6 +53,12 @@ def resolve_tile(
 ) -> int:
     """Tile height for one subproblem; cached per shape, overridable.
 
+    The cache key is purely the spec VALUE shape — ``(n, m_eff, method,
+    key_value, backend)``, with ``m_eff`` derived from the (hashable)
+    bucket spec — never a spec/identifier object id, so equal spec
+    instances share one entry and the cache cannot grow per instance
+    (regression-tested).
+
     An explicit ``requested`` tile is returned verbatim and deliberately
     NEVER written into the cache: a one-off override must not change what
     later same-shape calls resolve to (regression-tested)."""
@@ -72,7 +78,7 @@ def clear_tile_cache() -> None:
 
 def autotune_tile(
     n: int,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     *,
     method: str = "bms",
     key_value: bool = False,

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import multisplit as ms
-from repro.core.identifiers import BucketIdentifier
+from repro.core.identifiers import BucketSpec
 from repro.core.pipeline import (
     RadixPipeline,
     make_radix_plan,
@@ -175,7 +175,7 @@ def radix_sort_per_pass(
 
 def rb_sort_multisplit(
     keys: Array,
-    bucket_fn: BucketIdentifier,
+    bucket_fn: BucketSpec,
     values: Optional[Array] = None,
 ) -> ms.MultisplitResult:
     """Reduced-bit-sort baseline (§3.4): sort (label, payload) by label.

@@ -25,8 +25,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.identifiers import range_buckets
-from repro.core.pipeline import make_plan
+from repro import ops
 
 import jax.numpy as jnp
 
@@ -74,22 +73,23 @@ class DataPipeline:
         """Bucket-major doc order for MANY steps in ONE device launch.
 
         ``lengths_list`` holds one per-step length vector; the concatenation
-        is one segmented ``positions_only`` pipeline call (segment = step).
+        is one segmented ``positions_only`` ``repro.ops`` call (segment =
+        step) over a hashable :class:`~repro.ops.RangeSpec` — equal bucket
+        boundaries share one trace across pipelines and prefetch windows.
         Only the segment-local eq. (2) permutation comes back host-side —
         ``order[perm[i]] = i`` inverts it into the stable bucket-major doc
         visit order per step (bitwise what the old per-step full-reorder
         multisplit produced, without materializing any reordered array).
         """
-        bf = range_buckets(jnp.asarray(self.bucket_lengths[:-1], jnp.int32))
+        bf = ops.range_buckets(self.bucket_lengths[:-1])
         sizes = [len(ln) for ln in lengths_list]
         flat = np.concatenate([np.asarray(ln, np.int32) for ln in lengths_list])
         starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
-        plan = make_plan(
-            int(flat.shape[0]), bf.num_buckets, method="dms", backend="vmap",
-            bucket_fn=bf, segments=len(sizes), mode="positions_only",
-        )
         perm = np.asarray(
-            plan(jnp.asarray(flat), segment_starts=jnp.asarray(starts)).permutation
+            ops.segmented_multisplit(
+                jnp.asarray(flat), bf, jnp.asarray(starts), method="dms",
+                mode="positions_only",
+            ).permutation
         )
         orders = []
         for a, sz in zip(starts, sizes):

@@ -30,6 +30,17 @@ additionally carries a per-element SEGMENT id strip. The kernel combines
 every element within its own (segment, bucket) cell — many independent
 ragged multisplits per grid launch, no host-side combined-id array and no
 per-segment relaunch.
+
+Fused-label variants (``spec_*``, DESIGN.md §11): the kernels take the KEY
+strip plus a hashable :class:`~repro.core.identifiers.BucketSpec` (a static
+kernel parameter) and evaluate ``spec.emit_in_kernel(keys)`` *inside* the
+kernel —
+bucket ids live only in registers/VMEM, exactly the paper's warp-private
+bucket computation, for EVERY declarative spec (delta, range/splitter,
+even, identity, radix bitfield), not just the radix digit. The n-sized
+label array of the pre-PR-4 pipeline never exists for these specs; the
+radix kernels in :mod:`repro.kernels.radix_pass` are now thin
+``BitfieldSpec`` instantiations of this machinery.
 """
 
 from __future__ import annotations
@@ -311,6 +322,263 @@ def seg_fused_postscan_reorder_pallas(
     out = pl.pallas_call(
         functools.partial(
             _seg_fused_postscan_kernel, m=num_buckets, m_pad=m_pad, has_values=has_values
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+# ---------------------------------------------------------------------------
+# Fused-label kernels (DESIGN.md §11): bucket ids computed IN-REGISTER from a
+# declarative BucketSpec — the generic form of the radix kernels. ``spec`` is
+# a static kernel parameter (hashable, so the jit'd wrappers cache across
+# equal spec instances); ``spec.emit`` is plain vectorized jnp traced into
+# the kernel body. No label strip enters or leaves the kernel.
+# ---------------------------------------------------------------------------
+
+def _spec_hist_kernel(keys_ref, hist_ref, *, spec, m_pad: int):
+    ids = spec.emit_in_kernel(keys_ref[0, :])               # in-register labels
+    hist_ref[0, :] = _one_hot(ids, m_pad).sum(axis=0).astype(jnp.int32)
+
+
+def spec_tile_histograms_pallas(
+    keys_tiled: Array, spec, *, interpret: bool = True
+) -> Array:
+    """(L, T) keys -> (L, m) per-tile histograms; labels fused in-kernel."""
+    n_tiles, t = keys_tiled.shape
+    m = spec.num_buckets
+    m_pad = _pad_lanes(m)
+    out = pl.pallas_call(
+        functools.partial(_spec_hist_kernel, spec=spec, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled)
+    return out[:, :m]
+
+
+def _spec_positions_kernel(keys_ref, g_ref, pos_ref, *, spec, m_pad: int):
+    ids = spec.emit_in_kernel(keys_ref[0, :])
+    g = g_ref[0, :].astype(jnp.float32)
+    one_hot = _one_hot(ids, m_pad)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)
+    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    pos_ref[0, :] = (base + local).astype(jnp.int32)
+
+
+def spec_tile_positions_pallas(
+    keys_tiled: Array, g: Array, spec, *, interpret: bool = True
+) -> Array:
+    """Fused-label DMS postscan: (L, T) keys + (L, m) bases -> (L, T) dests."""
+    n_tiles, t = keys_tiled.shape
+    m = spec.num_buckets
+    m_pad = _pad_lanes(m)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
+    return pl.pallas_call(
+        functools.partial(_spec_positions_kernel, spec=spec, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled, g_pad)
+
+
+def _spec_fused_postscan_kernel(*refs, spec, m_pad: int, has_values: bool):
+    if has_values:
+        (keys_ref, g_ref, vals_ref,
+         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
+    else:
+        keys_ref, g_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
+        vals_ref = vals_out_ref = None
+
+    keys = keys_ref[0, :]
+    ids = spec.emit_in_kernel(keys)                         # in-register labels
+    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
+        ids, g_ref[0, :], keys, vals_ref[0, :] if has_values else None, m_pad
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos                               # element-ordered perm
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def spec_fused_postscan_reorder_pallas(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    spec,
+    *,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Fused-label WMS/BMS postscan: contract of
+    :func:`fused_postscan_reorder_pallas` with the label strip replaced by
+    in-kernel ``spec.emit`` evaluation."""
+    n_tiles, t = keys_tiled.shape
+    m = spec.num_buckets
+    m_pad = _pad_lanes(m)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    in_specs = [row, pl.BlockSpec((1, m_pad), lambda i: (i, 0))] + ([row] if has_values else [])
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    args = (keys_tiled, g_pad) + ((values_tiled,) if has_values else ())
+    out = pl.pallas_call(
+        functools.partial(
+            _spec_fused_postscan_kernel, spec=spec, m_pad=m_pad, has_values=has_values
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+# -- segmented fused-label kernels: cid = seg*m + spec.emit(keys), both parts
+# computed in-register (DESIGN.md §9 x §11).
+
+def _seg_spec_hist_kernel(keys_ref, seg_ref, hist_ref, *, spec, m_pad: int):
+    cid = spec.emit_in_kernel(keys_ref[0, :]) + seg_ref[0, :] * spec.num_buckets
+    hist_ref[0, :] = _one_hot(cid, m_pad).sum(axis=0).astype(jnp.int32)
+
+
+def seg_spec_tile_histograms_pallas(
+    keys_tiled: Array, seg_tiled: Array, spec, num_segments: int,
+    *, interpret: bool = True,
+) -> Array:
+    """(L, T) keys + (L, T) segment ids -> (L, s*m) combined histograms."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    out = pl.pallas_call(
+        functools.partial(_seg_spec_hist_kernel, spec=spec, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled, seg_tiled)
+    return out[:, :m_eff]
+
+
+def _seg_spec_positions_kernel(keys_ref, seg_ref, g_ref, pos_ref, *, spec, m_pad: int):
+    cid = spec.emit_in_kernel(keys_ref[0, :]) + seg_ref[0, :] * spec.num_buckets
+    g = g_ref[0, :].astype(jnp.float32)
+    one_hot = _one_hot(cid, m_pad)
+    incl = _cumsum_mxu(one_hot)
+    local = ((incl - 1.0) * one_hot).sum(axis=1)
+    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
+    pos_ref[0, :] = (base + local).astype(jnp.int32)
+
+
+def seg_spec_tile_positions_pallas(
+    keys_tiled: Array, seg_tiled: Array, g: Array, spec, num_segments: int,
+    *, interpret: bool = True,
+) -> Array:
+    """Segmented fused-label DMS postscan: (seg, bucket) dests, eq. (2)."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
+    return pl.pallas_call(
+        functools.partial(_seg_spec_positions_kernel, spec=spec, m_pad=m_pad),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled, seg_tiled, g_pad)
+
+
+def _seg_spec_fused_postscan_kernel(*refs, spec, m_pad: int, has_values: bool):
+    if has_values:
+        (keys_ref, seg_ref, g_ref, vals_ref,
+         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
+    else:
+        keys_ref, seg_ref, g_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
+        vals_ref = vals_out_ref = None
+
+    keys = keys_ref[0, :]
+    cid = spec.emit_in_kernel(keys) + seg_ref[0, :] * spec.num_buckets
+    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
+        cid, g_ref[0, :], keys, vals_ref[0, :] if has_values else None, m_pad
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def seg_spec_fused_postscan_reorder_pallas(
+    keys_tiled: Array,
+    seg_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    spec,
+    num_segments: int,
+    *,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Segmented fused-label postscan+reorder: contract of
+    :func:`seg_fused_postscan_reorder_pallas` with in-kernel labels."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    m_pad = _pad_lanes(m_eff)
+    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    in_specs = [row, row, pl.BlockSpec((1, m_pad), lambda i: (i, 0))] + (
+        [row] if has_values else []
+    )
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    args = (keys_tiled, seg_tiled, g_pad) + ((values_tiled,) if has_values else ())
+    out = pl.pallas_call(
+        functools.partial(
+            _seg_spec_fused_postscan_kernel, spec=spec, m_pad=m_pad,
+            has_values=has_values,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,

@@ -73,6 +73,75 @@ def radix_fused_postscan_reorder(
     )
 
 
+# -- fused-label entry points (DESIGN.md §11): bucket ids computed in-kernel
+# from a hashable BucketSpec. ``spec`` is a STATIC jit argument — equal spec
+# instances (value-hashable dataclasses) share one trace/compilation, which
+# is what kills the per-identifier-instance retrace of the closure era.
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def spec_tile_histograms(keys_tiled: Array, spec, interpret: bool = True) -> Array:
+    return _mst.spec_tile_histograms_pallas(keys_tiled, spec, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def spec_tile_positions(
+    keys_tiled: Array, g: Array, spec, interpret: bool = True
+) -> Array:
+    return _mst.spec_tile_positions_pallas(keys_tiled, g, spec, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def spec_fused_postscan_reorder(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    spec,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE fused-label WMS/BMS postscan entry point (see multisplit_tile)."""
+    return _mst.spec_fused_postscan_reorder_pallas(
+        keys_tiled, g, values_tiled, spec, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_segments", "interpret"))
+def seg_spec_tile_histograms(
+    keys_tiled: Array, seg_tiled: Array, spec, num_segments: int,
+    interpret: bool = True,
+) -> Array:
+    return _mst.seg_spec_tile_histograms_pallas(
+        keys_tiled, seg_tiled, spec, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_segments", "interpret"))
+def seg_spec_tile_positions(
+    keys_tiled: Array, seg_tiled: Array, g: Array, spec, num_segments: int,
+    interpret: bool = True,
+) -> Array:
+    return _mst.seg_spec_tile_positions_pallas(
+        keys_tiled, seg_tiled, g, spec, num_segments, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_segments", "interpret"))
+def seg_spec_fused_postscan_reorder(
+    keys_tiled: Array,
+    seg_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array],
+    spec,
+    num_segments: int,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE segmented fused-label postscan entry point (labels AND segment id
+    combined in-register; see multisplit_tile)."""
+    return _mst.seg_spec_fused_postscan_reorder_pallas(
+        keys_tiled, seg_tiled, g, values_tiled, spec, num_segments,
+        interpret=interpret,
+    )
+
+
 # -- segmented entry points (DESIGN.md §9): segment id rides in-kernel ------
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))

@@ -4,122 +4,52 @@ One multisplit-sort pass (paper §7.1) needs the bucket identifier
 ``f_k(u) = (u >> k·r) & (2^r − 1)`` evaluated twice (prescan + postscan).
 Fusing the shift/mask into the kernels means the label vector NEVER exists in
 HBM — the exact overhead the paper's RB-sort baseline pays (§3.4) and its
-multisplit avoids. ``radix_sort(use_pallas=True)`` routes every pass through
-these two kernels (via :mod:`repro.core.plan`):
+multisplit avoids.
 
-* ``radix_tile_histograms_pallas``      — prescan: digits + tile histogram.
+Since PR-4 the radix digit is just :class:`~repro.core.identifiers.
+BitfieldSpec` and in-kernel label fusion is the GENERIC fused-label
+machinery of :mod:`repro.kernels.multisplit_tile` (DESIGN.md §11): every
+entry point here is a thin ``BitfieldSpec(shift, bits)`` instantiation of
+the corresponding ``spec_*`` kernel, kept under its historical name because
+``radix_sort`` predates the general mechanism and benchmarks/tests address
+these doors directly.
+
+* ``radix_tile_histograms_pallas``        — prescan: digits + tile histogram.
 * ``radix_fused_postscan_reorder_pallas`` — postscan: digits + local ranks +
-  global destinations + within-tile digit-major reorder of keys (and values)
-  from ONE one-hot/cumsum evaluation (DESIGN.md §4/§5).
-* ``radix_tile_positions_pallas``       — DMS (no-reorder) postscan variant.
-
-Segmented variants (``seg_radix_*``, DESIGN.md §9) additionally take a
-per-element segment-id strip and combine ``cid = (seg << bits) | digit``
-in-register: one grid launch sorts EVERY segment's digits independently —
-the machinery behind ``segmented_radix_sort``.
+  global destinations + within-tile digit-major reorder in ONE evaluation.
+* ``radix_tile_positions_pallas``         — DMS (no-reorder) postscan.
+* ``seg_radix_*``                         — segmented variants: the segment
+  id combines with the digit in-register, ``cid = (seg << bits) | digit``.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels.common import (
-    cumsum_mxu as _cumsum_mxu,
-    fused_postscan_body,
-    one_hot_f32 as _one_hot,
-    pad_lanes as _pad_lanes,
-)
+from repro.core.identifiers import BitfieldSpec
+from repro.kernels import multisplit_tile as _mst
 
 Array = jnp.ndarray
-
-
-def _digit(keys: Array, shift: int, bits: int) -> Array:
-    u = keys.astype(jnp.uint32)
-    return ((u >> jnp.uint32(shift)) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
-
-
-def _radix_hist_kernel(keys_ref, hist_ref, *, shift: int, bits: int, m_pad: int):
-    ids = _digit(keys_ref[0, :], shift, bits)
-    hist_ref[0, :] = _one_hot(ids, m_pad).sum(axis=0).astype(jnp.int32)
 
 
 def radix_tile_histograms_pallas(
     keys_tiled: Array, shift: int, bits: int, *, interpret: bool = True
 ) -> Array:
     """(L, T) uint32 keys -> (L, 2^bits) per-tile digit histograms (fused)."""
-    n_tiles, t = keys_tiled.shape
-    m = 1 << bits
-    m_pad = _pad_lanes(m)
-    out = pl.pallas_call(
-        functools.partial(_radix_hist_kernel, shift=shift, bits=bits, m_pad=m_pad),
-        grid=(n_tiles,),
-        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
-        interpret=interpret,
-    )(keys_tiled)
-    return out[:, :m]
-
-
-def _radix_pos_kernel(keys_ref, g_ref, pos_ref, *, shift: int, bits: int, m_pad: int):
-    ids = _digit(keys_ref[0, :], shift, bits)
-    g = g_ref[0, :].astype(jnp.float32)
-    one_hot = _one_hot(ids, m_pad)
-    incl = _cumsum_mxu(one_hot)
-    local = ((incl - 1.0) * one_hot).sum(axis=1)
-    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
-    pos_ref[0, :] = (base + local).astype(jnp.int32)
+    return _mst.spec_tile_histograms_pallas(
+        keys_tiled, BitfieldSpec(shift, bits), interpret=interpret
+    )
 
 
 def radix_tile_positions_pallas(
     keys_tiled: Array, g: Array, shift: int, bits: int, *, interpret: bool = True
 ) -> Array:
     """Fused DMS postscan for one radix pass: (L, T) keys + (L, m) bases -> (L, T) dests."""
-    n_tiles, t = keys_tiled.shape
-    m = 1 << bits
-    m_pad = _pad_lanes(m)
-    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
-    return pl.pallas_call(
-        functools.partial(_radix_pos_kernel, shift=shift, bits=bits, m_pad=m_pad),
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
-        interpret=interpret,
-    )(keys_tiled, g_pad)
-
-
-# ---------------------------------------------------------------------------
-# Fused WMS/BMS radix postscan: digits + ranks + global dests + reorder in one
-# VMEM pass — no label array, no separate reorder passes (DESIGN.md §5).
-# ---------------------------------------------------------------------------
-
-def _radix_fused_kernel(*refs, shift: int, bits: int, m_pad: int, has_values: bool):
-    if has_values:
-        (keys_ref, g_ref, vals_ref,
-         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
-    else:
-        keys_ref, g_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
-        vals_ref = vals_out_ref = None
-
-    keys = keys_ref[0, :]
-    ids = _digit(keys, shift, bits)                         # fused digit extraction
-    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
-        ids, g_ref[0, :], keys, vals_ref[0, :] if has_values else None, m_pad
+    return _mst.spec_tile_positions_pallas(
+        keys_tiled, g, BitfieldSpec(shift, bits), interpret=interpret
     )
-    keys_out_ref[0, :] = keys_r
-    pos_out_ref[0, :] = pos_r
-    perm_out_ref[0, :] = gpos                               # element-ordered perm
-    if has_values:
-        vals_out_ref[0, :] = vals_r
 
 
 def radix_fused_postscan_reorder_pallas(
@@ -132,53 +62,12 @@ def radix_fused_postscan_reorder_pallas(
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """(L,T) keys + (L,m) bases [+ (L,T) values]
-    -> (keys_r, values_r, pos_r, perm).
-
-    Digit-major within each tile; ``pos_r`` holds global destinations so the
-    caller's scatter is the only remaining data movement of the pass, and
-    ``perm`` is the element-ordered destination map (free byproduct).
-    """
-    n_tiles, t = keys_tiled.shape
-    m = 1 << bits
-    m_pad = _pad_lanes(m)
-    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m].set(g)
-    has_values = values_tiled is not None
-    row = pl.BlockSpec((1, t), lambda i: (i, 0))
-    in_specs = [row, pl.BlockSpec((1, m_pad), lambda i: (i, 0))] + ([row] if has_values else [])
-    out_specs = [row] * (4 if has_values else 3)
-    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
-    if has_values:
-        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
-    out_shape += [
-        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
-        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
-    ]
-    args = (keys_tiled, g_pad) + ((values_tiled,) if has_values else ())
-    out = pl.pallas_call(
-        functools.partial(
-            _radix_fused_kernel, shift=shift, bits=bits, m_pad=m_pad, has_values=has_values
-        ),
-        grid=(n_tiles,),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(*args)
-    if has_values:
-        keys_r, vals_r, pos_r, perm = out
-        return keys_r, vals_r, pos_r, perm
-    keys_r, pos_r, perm = out
-    return keys_r, None, pos_r, perm
-
-
-# ---------------------------------------------------------------------------
-# Segmented radix kernels: digit + segment id combined in-register, so one
-# grid launch runs an independent radix pass per segment (DESIGN.md §9).
-# ---------------------------------------------------------------------------
-
-def _seg_radix_hist_kernel(keys_ref, seg_ref, hist_ref, *, shift: int, bits: int, m_pad: int):
-    cid = _digit(keys_ref[0, :], shift, bits) + seg_ref[0, :] * (1 << bits)
-    hist_ref[0, :] = _one_hot(cid, m_pad).sum(axis=0).astype(jnp.int32)
+    -> (keys_r, values_r, pos_r, perm), digit-major within each tile
+    (contract of :func:`~repro.kernels.multisplit_tile.
+    spec_fused_postscan_reorder_pallas`)."""
+    return _mst.spec_fused_postscan_reorder_pallas(
+        keys_tiled, g, values_tiled, BitfieldSpec(shift, bits), interpret=interpret
+    )
 
 
 def seg_radix_tile_histograms_pallas(
@@ -186,31 +75,10 @@ def seg_radix_tile_histograms_pallas(
     *, interpret: bool = True,
 ) -> Array:
     """(L, T) keys + (L, T) segment ids -> (L, s·2^bits) combined histograms."""
-    n_tiles, t = keys_tiled.shape
-    m_eff = num_segments << bits
-    m_pad = _pad_lanes(m_eff)
-    out = pl.pallas_call(
-        functools.partial(_seg_radix_hist_kernel, shift=shift, bits=bits, m_pad=m_pad),
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, m_pad), jnp.int32),
+    return _mst.seg_spec_tile_histograms_pallas(
+        keys_tiled, seg_tiled, BitfieldSpec(shift, bits), num_segments,
         interpret=interpret,
-    )(keys_tiled, seg_tiled)
-    return out[:, :m_eff]
-
-
-def _seg_radix_pos_kernel(keys_ref, seg_ref, g_ref, pos_ref, *, shift: int, bits: int, m_pad: int):
-    cid = _digit(keys_ref[0, :], shift, bits) + seg_ref[0, :] * (1 << bits)
-    g = g_ref[0, :].astype(jnp.float32)
-    one_hot = _one_hot(cid, m_pad)
-    incl = _cumsum_mxu(one_hot)
-    local = ((incl - 1.0) * one_hot).sum(axis=1)
-    base = jax.lax.dot(one_hot, g[:, None], precision=jax.lax.Precision.HIGHEST)[:, 0]
-    pos_ref[0, :] = (base + local).astype(jnp.int32)
+    )
 
 
 def seg_radix_tile_positions_pallas(
@@ -218,42 +86,10 @@ def seg_radix_tile_positions_pallas(
     num_segments: int, *, interpret: bool = True,
 ) -> Array:
     """Segmented DMS radix postscan: combined (seg, digit) destinations."""
-    n_tiles, t = keys_tiled.shape
-    m_eff = num_segments << bits
-    m_pad = _pad_lanes(m_eff)
-    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
-    return pl.pallas_call(
-        functools.partial(_seg_radix_pos_kernel, shift=shift, bits=bits, m_pad=m_pad),
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, t), lambda i: (i, 0)),
-            pl.BlockSpec((1, m_pad), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    return _mst.seg_spec_tile_positions_pallas(
+        keys_tiled, seg_tiled, g, BitfieldSpec(shift, bits), num_segments,
         interpret=interpret,
-    )(keys_tiled, seg_tiled, g_pad)
-
-
-def _seg_radix_fused_kernel(*refs, shift: int, bits: int, m_pad: int, has_values: bool):
-    if has_values:
-        (keys_ref, seg_ref, g_ref, vals_ref,
-         keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref) = refs
-    else:
-        keys_ref, seg_ref, g_ref, keys_out_ref, pos_out_ref, perm_out_ref = refs
-        vals_ref = vals_out_ref = None
-
-    keys = keys_ref[0, :]
-    cid = _digit(keys, shift, bits) + seg_ref[0, :] * (1 << bits)
-    keys_r, vals_r, pos_r, gpos = fused_postscan_body(
-        cid, g_ref[0, :], keys, vals_ref[0, :] if has_values else None, m_pad
     )
-    keys_out_ref[0, :] = keys_r
-    pos_out_ref[0, :] = pos_r
-    perm_out_ref[0, :] = gpos
-    if has_values:
-        vals_out_ref[0, :] = vals_r
 
 
 def seg_radix_fused_postscan_reorder_pallas(
@@ -267,40 +103,8 @@ def seg_radix_fused_postscan_reorder_pallas(
     *,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
-    """Segmented fused radix postscan: (seg, digit)-major within each tile;
-    contract matches :func:`radix_fused_postscan_reorder_pallas` with the
-    bucket axis widened to ``s·2^bits``."""
-    n_tiles, t = keys_tiled.shape
-    m_eff = num_segments << bits
-    m_pad = _pad_lanes(m_eff)
-    g_pad = jnp.zeros((n_tiles, m_pad), g.dtype).at[:, :m_eff].set(g)
-    has_values = values_tiled is not None
-    row = pl.BlockSpec((1, t), lambda i: (i, 0))
-    in_specs = [row, row, pl.BlockSpec((1, m_pad), lambda i: (i, 0))] + (
-        [row] if has_values else []
+    """Segmented fused radix postscan: (seg, digit)-major within each tile."""
+    return _mst.seg_spec_fused_postscan_reorder_pallas(
+        keys_tiled, seg_tiled, g, values_tiled, BitfieldSpec(shift, bits),
+        num_segments, interpret=interpret,
     )
-    out_specs = [row] * (4 if has_values else 3)
-    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
-    if has_values:
-        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
-    out_shape += [
-        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
-        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
-    ]
-    args = (keys_tiled, seg_tiled, g_pad) + ((values_tiled,) if has_values else ())
-    out = pl.pallas_call(
-        functools.partial(
-            _seg_radix_fused_kernel, shift=shift, bits=bits, m_pad=m_pad,
-            has_values=has_values,
-        ),
-        grid=(n_tiles,),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(*args)
-    if has_values:
-        keys_r, vals_r, pos_r, perm = out
-        return keys_r, vals_r, pos_r, perm
-    keys_r, pos_r, perm = out
-    return keys_r, None, pos_r, perm

@@ -88,9 +88,11 @@ def expert_load_stats(
     capacity: Optional[int] = None,
     segment_starts: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
-    """Per-expert token load via a ``counts_only`` pipeline (DESIGN.md §10):
-    {prescan, tree-reduce}, no scan and no permutation — the §7.3 histogram
-    machinery pointed at the router output.
+    """Per-expert token load via ``repro.ops`` ``counts_only`` calls
+    (DESIGN.md §10/§11): {prescan, tree-reduce}, no scan and no permutation
+    — the §7.3 histogram machinery pointed at the router output.  The
+    :class:`~repro.ops.IdentitySpec` is hashable, so every MoE layer and
+    every step shares ONE trace of the dispatch op.
 
     Returns ``(counts, overflow_fraction)``: ``counts`` is the (e,) — or
     (s, e) with ``segment_starts`` — expert histogram, and
@@ -98,19 +100,20 @@ def expert_load_stats(
     expert (0.0 when ``capacity`` is None), i.e. the drop rate a
     capacity-bounded dispatch of these assignments would incur.
     """
-    from repro.core.identifiers import identity_buckets
-    from repro.core.pipeline import make_plan
+    from repro import ops
 
     n = expert_ids.shape[0]
     tile = min(DISPATCH_TILE, max(int(n), 1))
-    seg = None if segment_starts is None else jnp.asarray(segment_starts, jnp.int32)
-    plan = make_plan(
-        n, num_experts, method="dms", backend="vmap", tile=tile,
-        bucket_fn=identity_buckets(num_experts),
-        segments=None if seg is None else int(seg.shape[0]),
-        mode="counts_only",
-    )
-    counts = plan(expert_ids, segment_starts=seg).bucket_counts
+    spec = ops.identity_buckets(num_experts)
+    if segment_starts is None:
+        counts = ops.multisplit(
+            expert_ids, spec, method="dms", tile=tile, mode="counts_only"
+        ).bucket_counts
+    else:
+        counts = ops.segmented_multisplit(
+            expert_ids, spec, segment_starts, method="dms", tile=tile,
+            mode="counts_only",
+        ).bucket_counts
     if capacity is None or n == 0:
         return counts, jnp.zeros((), jnp.float32)
     dropped = jnp.maximum(counts - capacity, 0).sum()
@@ -122,26 +125,23 @@ def _ranks_multisplit(
 ) -> Tuple[Array, Array]:
     """Stable rank of each virtual token within its expert + expert counts.
 
-    THE paper technique, executed as ONE ``positions_only`` pipeline call
-    (DESIGN.md §10: prescan, one global scan, postscan positions — the
-    reordered-keys stage never runs, and nothing but the eq. (2) permutation
-    is materialized). With ``segment_starts`` the call is a single SEGMENTED
-    multisplit (DESIGN.md §9): ranks restart per segment and ``counts`` is
-    the (s, e) per-segment expert histogram — per-request routing in one
-    launch instead of a host loop over requests.
+    THE paper technique, executed as ONE ``positions_only``
+    ``repro.ops.multisplit`` call (DESIGN.md §10: prescan, one global scan,
+    postscan positions — the reordered-keys stage never runs, and nothing
+    but the eq. (2) permutation is materialized). With ``segment_starts``
+    the call is a single SEGMENTED multisplit (DESIGN.md §9): ranks restart
+    per segment and ``counts`` is the (s, e) per-segment expert histogram —
+    per-request routing in one launch instead of a host loop over requests.
     """
-    from repro.core.identifiers import identity_buckets
-    from repro.core.pipeline import make_plan
+    from repro import ops
 
     n = expert_ids.shape[0]
-    bf = identity_buckets(num_experts)
     tile = min(DISPATCH_TILE, max(int(n), 1))
     if segment_starts is None:
-        plan = make_plan(
-            n, num_experts, method="dms", backend="vmap", tile=tile, bucket_fn=bf,
-            mode="positions_only",
+        res = ops.multisplit(
+            expert_ids, ops.identity_buckets(num_experts), method="dms",
+            tile=tile, mode="positions_only",
         )
-        res = plan(expert_ids)
         ranks = res.permutation - res.bucket_starts[expert_ids]
         return ranks.astype(jnp.int32), res.bucket_counts
     ranks, counts, _ = _segmented_ranks(
@@ -153,19 +153,17 @@ def _ranks_multisplit(
 def _segmented_ranks(
     expert_ids: Array, seg: Array, num_experts: int, tile: int
 ) -> Tuple[Array, Array, Array]:
-    """One segmented ``positions_only`` pipeline call -> (ranks, (s, e)
+    """One segmented ``positions_only`` ``repro.ops`` call -> (ranks, (s, e)
     counts, seg_ids); the derived per-token segment id is returned so
     hot-path callers don't recompute the searchsorted."""
-    from repro.core.identifiers import identity_buckets
-    from repro.core.pipeline import make_plan, segment_ids_from_starts
+    from repro import ops
+    from repro.core.pipeline import segment_ids_from_starts
 
     n = expert_ids.shape[0]
-    plan = make_plan(
-        n, num_experts, method="dms", backend="vmap", tile=tile,
-        bucket_fn=identity_buckets(num_experts), segments=int(seg.shape[0]),
-        mode="positions_only",
+    res = ops.segmented_multisplit(
+        expert_ids, ops.identity_buckets(num_experts), seg, method="dms",
+        tile=tile, mode="positions_only",
     )
-    res = plan(expert_ids, segment_starts=seg)
     seg_ids = segment_ids_from_starts(seg, n)
     ranks = res.permutation - res.bucket_starts[seg_ids, expert_ids]
     return ranks.astype(jnp.int32), res.bucket_counts, seg_ids

@@ -1,0 +1,303 @@
+"""repro.ops — the stable, transform-native public API (DESIGN.md §11).
+
+This is the namespace models, pipelines and downstream PRs program against:
+declarative hashable bucket specs plus the multisplit operator family, with
+JAX transforms wired in as first-class citizens rather than afterthoughts:
+
+* ``jit``  — specs are value-hashable, leafless pytrees, so equal spec
+  instances share ONE trace (zero retraces across ``delta_buckets(32)``
+  calls, whether the spec rides as a static argument or a pytree argument).
+* ``vmap`` — :func:`multisplit` carries a ``jax.custom_batching.custom_vmap``
+  rule that routes ``jax.vmap(ops.multisplit)`` onto a BATCHED plan
+  (DESIGN.md §9): ONE kernel launch for the whole batch, bitwise equal to
+  the per-row loop it replaces.  Without the rule, vmap would silently
+  trace the flat pipeline per element and miss the batched layout.
+* ``grad`` — :func:`multisplit_key_value` is a ``jax.custom_vjp``: the
+  backward pass of the value permutation is the INVERSE GATHER of the
+  forward permutation (one ``take`` — no scatter transpose, no dense
+  one-hot), so routing/bucketing sits inside ``grad`` end-to-end.
+
+Execution is unchanged underneath: every op resolves a
+:class:`~repro.core.pipeline.MultisplitPlan` through the backend registry.
+Ops are cached per (spec, shape, config) — hashable specs make the cache
+exact, not identity-based.
+
+Stability policy: everything in ``__all__`` is covered by the API snapshot
+test (``tests/test_api_surface.py``); changing a signature here is a
+deliberate, test-visible act.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import custom_batching
+
+from repro.core.identifiers import (
+    BitfieldSpec,
+    BucketIdentifier,
+    BucketSpec,
+    CallableSpec,
+    DeltaSpec,
+    EvenSpec,
+    IdentitySpec,
+    RangeSpec,
+    as_spec,
+    delta_buckets,
+    even_buckets,
+    from_fn,
+    identity_buckets,
+    radix_buckets,
+    range_buckets,
+)
+from repro.core.pipeline import (
+    MultisplitResult,
+    make_batched_plan,
+    make_plan,
+    make_segmented_plan,
+)
+from repro.core.sort import radix_sort, segmented_radix_sort
+
+Array = jnp.ndarray
+
+__all__ = [
+    # bucket specs (hashable, pytree-static, kernel-fusable)
+    "BucketSpec", "BitfieldSpec", "CallableSpec", "DeltaSpec", "EvenSpec",
+    "IdentitySpec", "RangeSpec", "BucketIdentifier",
+    "as_spec", "delta_buckets", "even_buckets", "from_fn",
+    "identity_buckets", "radix_buckets", "range_buckets",
+    # results
+    "MultisplitResult",
+    # operators
+    "multisplit", "multisplit_key_value", "segmented_multisplit",
+    "histogram", "radix_sort", "segmented_radix_sort",
+]
+
+
+def _out_batched(res: MultisplitResult) -> MultisplitResult:
+    """out_batched pytree for a custom_vmap rule: True per present field."""
+    return MultisplitResult(
+        None if res.keys is None else True,
+        None if res.values is None else True,
+        True, True,
+        None if res.permutation is None else True,
+    )
+
+
+def _broadcast_unbatched(x: Array, batched: bool, axis_size: int) -> Array:
+    if batched:
+        return x
+    return jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+
+
+def _build_flat_op(spec: BucketSpec, n: int, method: str, backend: str,
+                   tile: Optional[int], mode: str):
+    """The key-only op for one (spec, n, config): a custom_vmap-wrapped flat
+    plan whose vmap rule IS the batched plan (one launch, DESIGN.md §9)."""
+    plan = make_plan(
+        n, spec.num_buckets, method=method, backend=backend, tile=tile,
+        bucket_fn=spec, mode=mode,
+    )
+
+    @custom_batching.custom_vmap
+    def op(keys):
+        return plan(keys)
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, keys):  # noqa: ANN001 - jax rule signature
+        keys = _broadcast_unbatched(keys, in_batched[0], axis_size)
+        bplan = make_batched_plan(
+            axis_size, n, spec.num_buckets, method=method, backend=backend,
+            tile=tile, bucket_fn=spec, mode=mode,
+        )
+        res = bplan(keys)
+        return res, _out_batched(res)
+
+    return op
+
+
+# Declarative specs hash by VALUE, so the cache is exact and bounded by the
+# distinct (spec, shape, config) set.  CallableSpec hashes by function
+# identity — caching it would both miss for per-call closures and pin the
+# closure (and anything it captures) for the module lifetime — so callables
+# take the uncached builder.
+_flat_op_cached = functools.lru_cache(maxsize=512)(_build_flat_op)
+
+
+def _flat_op(spec, n, method, backend, tile, mode):
+    if isinstance(spec, CallableSpec):
+        return _build_flat_op(spec, n, method, backend, tile, mode)
+    return _flat_op_cached(spec, n, method, backend, tile, mode)
+
+
+def _ct_gather(ct_leaf, perm):
+    """One cotangent leaf of the kv backward pass: the inverse gather of the
+    forward permutation (``d_in[i] = ct_out[perm[i]]``); integer primals get
+    their mandated float0 zero."""
+    if ct_leaf.dtype == jax.dtypes.float0:
+        return np.zeros(np.shape(ct_leaf), jax.dtypes.float0)
+    return jnp.take_along_axis(ct_leaf, perm, axis=-1)
+
+
+def _build_kv_op(spec: BucketSpec, n: int, method: str, backend: str,
+                 tile: Optional[int]):
+    """The key-value op: custom_vjp (backward = inverse gather of the
+    forward permutation) over a custom_vmap inner (batched-plan vmap rule),
+    so grad, vmap, and vmap-of-grad all hit the intended paths."""
+    plan = make_plan(
+        n, spec.num_buckets, method=method, key_value=True, backend=backend,
+        tile=tile, bucket_fn=spec,
+    )
+
+    @custom_batching.custom_vmap
+    def inner(keys, values):
+        return plan(keys, values)
+
+    @inner.def_vmap
+    def _rule(axis_size, in_batched, keys, values):  # noqa: ANN001
+        keys = _broadcast_unbatched(keys, in_batched[0], axis_size)
+        values = _broadcast_unbatched(values, in_batched[1], axis_size)
+        bplan = make_batched_plan(
+            axis_size, n, spec.num_buckets, method=method, key_value=True,
+            backend=backend, tile=tile, bucket_fn=spec,
+        )
+        res = bplan(keys, values)
+        return res, _out_batched(res)
+
+    @jax.custom_vjp
+    def op(keys, values):
+        return inner(keys, values)
+
+    def fwd(keys, values):
+        res = inner(keys, values)
+        return res, (res.permutation,)
+
+    def bwd(residuals, ct):
+        (perm,) = residuals
+        # out[perm[i]] = in[i]  =>  d_in[i] = ct_out[perm[i]]: ONE gather.
+        # Cotangents of the integer outputs (counts/starts/perm) are float0
+        # and contribute nothing by construction.
+        return _ct_gather(ct.keys, perm), _ct_gather(ct.values, perm)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+_kv_op_cached = functools.lru_cache(maxsize=512)(_build_kv_op)
+
+
+def _kv_op(spec, n, method, backend, tile):
+    if isinstance(spec, CallableSpec):               # see _flat_op
+        return _build_kv_op(spec, n, method, backend, tile)
+    return _kv_op_cached(spec, n, method, backend, tile)
+
+
+def _check_flat(keys: Array, what: str) -> None:
+    if keys.ndim != 1:
+        raise ValueError(
+            f"{what} takes rank-1 keys (got shape {keys.shape}); batch with "
+            f"jax.vmap({what}) — it dispatches to ONE batched-plan launch"
+        )
+
+
+def multisplit(
+    keys: Array,
+    spec: BucketSpec,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    mode: str = "reorder",
+) -> MultisplitResult:
+    """Stable multisplit of ``keys`` (and optional ``values``) into the
+    buckets of a declarative ``spec`` (paper §3.1).
+
+    Transform-native: ``jax.vmap(ops.multisplit)`` runs the whole batch as
+    ONE batched-plan launch (bitwise equal to the per-row loop); with
+    ``values`` the op is differentiable (see :func:`multisplit_key_value`);
+    equal specs share one trace under ``jit``.  ``mode`` selects a partial
+    pipeline (``counts_only`` / ``positions_only``, key-only — DESIGN.md
+    §10).
+    """
+    spec = as_spec(spec)
+    _check_flat(keys, "ops.multisplit")
+    if values is not None:
+        if mode != "reorder":
+            raise ValueError(f"mode={mode!r} never touches values")
+        return multisplit_key_value(
+            keys, values, spec, method=method, backend=backend, tile=tile
+        )
+    return _flat_op(spec, keys.shape[0], method, backend, tile, mode)(keys)
+
+
+def multisplit_key_value(
+    keys: Array,
+    values: Array,
+    spec: BucketSpec,
+    *,
+    method: str = "bms",
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+) -> MultisplitResult:
+    """Key-value multisplit, differentiable in ``values`` (and in ``keys``
+    when they are inexact): the backward pass is the INVERSE GATHER of the
+    forward permutation — ``d_in[i] = ct_out[perm[i]]``, one ``take`` per
+    operand, no dense one-hot and no scatter transpose.
+
+    ``jax.vmap`` of this op (with or without ``jax.grad``) also dispatches
+    to ONE batched-plan launch via the inner custom-vmap rule.
+    """
+    spec = as_spec(spec)
+    _check_flat(keys, "ops.multisplit_key_value")
+    return _kv_op(spec, keys.shape[0], method, backend, tile)(keys, values)
+
+
+def segmented_multisplit(
+    keys: Array,
+    spec: BucketSpec,
+    segment_starts,
+    values: Optional[Array] = None,
+    *,
+    method: str = "bms",
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+    mode: str = "reorder",
+) -> MultisplitResult:
+    """Multisplit every ragged segment of flat ``keys`` independently in ONE
+    plan launch (DESIGN.md §9): ``segment_starts`` is the (s,) ascending
+    start-offset vector (``segment_starts[0] == 0``; empty segments
+    allowed).  Bitwise identical to per-segment :func:`multisplit` calls;
+    counts/starts come back (s, m) segment-local."""
+    spec = as_spec(spec)
+    _check_flat(keys, "ops.segmented_multisplit")
+    if values is not None and mode != "reorder":
+        raise ValueError(f"mode={mode!r} never touches values")
+    seg = jnp.asarray(segment_starts, jnp.int32)
+    plan = make_segmented_plan(
+        keys.shape[0], int(seg.shape[0]), spec.num_buckets, method=method,
+        key_value=values is not None, backend=backend, tile=tile,
+        bucket_fn=spec, mode=mode,
+    )
+    return plan(keys, values, segment_starts=seg)
+
+
+def histogram(
+    keys: Array,
+    spec: BucketSpec,
+    *,
+    backend: str = "vmap",
+    tile: Optional[int] = None,
+) -> Array:
+    """Device-wide bucket counts (paper §7.3): the ``counts_only`` partial
+    pipeline — {prescan, tree-reduce}, no scan, no scatter."""
+    spec = as_spec(spec)
+    _check_flat(keys, "ops.histogram")
+    return multisplit(
+        keys, spec, backend=backend, tile=tile, mode="counts_only"
+    ).bucket_counts

@@ -1,0 +1,89 @@
+"""Public-API snapshot (ISSUE 4 satellite): `repro.ops` is the stable
+surface downstream PRs (sharded/multi-host, new backends) program against.
+This test pins ``__all__`` and the operator signatures — changing either is
+a deliberate, reviewed act, not a side effect."""
+
+import inspect
+
+import pytest
+
+from repro import ops
+
+EXPECTED_ALL = (
+    "BucketSpec", "BitfieldSpec", "CallableSpec", "DeltaSpec", "EvenSpec",
+    "IdentitySpec", "RangeSpec", "BucketIdentifier",
+    "as_spec", "delta_buckets", "even_buckets", "from_fn",
+    "identity_buckets", "radix_buckets", "range_buckets",
+    "MultisplitResult",
+    "multisplit", "multisplit_key_value", "segmented_multisplit",
+    "histogram", "radix_sort", "segmented_radix_sort",
+)
+
+EXPECTED_SIGNATURES = {
+    "multisplit": (
+        "(keys, spec, values=None, *, method='bms', backend='vmap', "
+        "tile=None, mode='reorder')"
+    ),
+    "multisplit_key_value": (
+        "(keys, values, spec, *, method='bms', backend='vmap', tile=None)"
+    ),
+    "segmented_multisplit": (
+        "(keys, spec, segment_starts, values=None, *, method='bms', "
+        "backend='vmap', tile=None, mode='reorder')"
+    ),
+    "histogram": "(keys, spec, *, backend='vmap', tile=None)",
+    "radix_sort": (
+        "(keys, values=None, *, radix_bits=8, key_bits=32, method='bms', "
+        "use_pallas=False, interpret=True, backend=None, tile=None)"
+    ),
+    "segmented_radix_sort": (
+        "(keys, segment_starts, values=None, *, radix_bits=8, key_bits=32, "
+        "method='bms', use_pallas=False, interpret=True, backend=None, "
+        "tile=None)"
+    ),
+    "delta_buckets": "(num_buckets, key_max=1073741824)",
+    "identity_buckets": "(num_buckets)",
+    "radix_buckets": "(pass_idx, radix_bits)",
+    "range_buckets": "(splitters)",
+    "even_buckets": "(lo, hi, num_buckets)",
+    "from_fn": "(fn, num_buckets, name='user')",
+}
+
+
+def _normalize(sig: inspect.Signature) -> str:
+    # strip annotations; keep names, kinds and defaults
+    params = [p.replace(annotation=inspect.Parameter.empty)
+              for p in sig.parameters.values()]
+    return str(inspect.Signature(params))
+
+
+def test_all_is_pinned():
+    assert tuple(ops.__all__) == EXPECTED_ALL
+    for name in ops.__all__:
+        assert hasattr(ops, name), f"__all__ names missing symbol {name}"
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_SIGNATURES))
+def test_operator_signatures_are_pinned(name):
+    got = _normalize(inspect.signature(getattr(ops, name)))
+    assert got == EXPECTED_SIGNATURES[name], (
+        f"ops.{name} signature changed:\n  pinned: {EXPECTED_SIGNATURES[name]}"
+        f"\n  actual: {got}\nUpdate the public-API stability policy "
+        "(DESIGN.md §11) and this snapshot together."
+    )
+
+
+def test_result_contract():
+    fields = ops.MultisplitResult._fields
+    assert fields == ("keys", "values", "bucket_starts", "bucket_counts", "permutation")
+
+
+def test_specs_in_all_are_hashable_types():
+    import dataclasses
+
+    for name in ("DeltaSpec", "BitfieldSpec", "RangeSpec", "EvenSpec",
+                 "IdentitySpec", "CallableSpec", "BucketIdentifier"):
+        cls = getattr(ops, name)
+        assert issubclass(cls, ops.BucketSpec)
+    s = ops.DeltaSpec(8, 1 << 20)
+    assert dataclasses.is_dataclass(s) and hash(s) == hash(ops.DeltaSpec(8, 1 << 20))

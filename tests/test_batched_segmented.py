@@ -100,8 +100,9 @@ def _count_calls(monkeypatch, module, name):
 def test_batched_pallas_is_one_grid_launch(monkeypatch):
     from repro.kernels import ops as kops
 
-    pre = _count_calls(monkeypatch, kops, "tile_histograms")
-    post = _count_calls(monkeypatch, kops, "fused_postscan_reorder")
+    # delta specs are label-fused since PR-4: count the spec entry points
+    pre = _count_calls(monkeypatch, kops, "spec_tile_histograms")
+    post = _count_calls(monkeypatch, kops, "spec_fused_postscan_reorder")
     b, n = 8, 512
     keys = _keys(b * n, seed=7).reshape(b, n)
     bf = delta_buckets(8, 2**30)
@@ -114,8 +115,8 @@ def test_batched_pallas_is_one_grid_launch(monkeypatch):
 def test_segmented_pallas_is_one_grid_launch(monkeypatch):
     from repro.kernels import ops as kops
 
-    pre = _count_calls(monkeypatch, kops, "seg_tile_histograms")
-    post = _count_calls(monkeypatch, kops, "seg_fused_postscan_reorder")
+    pre = _count_calls(monkeypatch, kops, "seg_spec_tile_histograms")
+    post = _count_calls(monkeypatch, kops, "seg_spec_fused_postscan_reorder")
     keys = _keys(1000, seed=8)
     bf = delta_buckets(8, 2**30)
     segmented_multisplit(keys, bf, [0, 100, 400, 400, 900], tile=256, backend="pallas-interpret")
@@ -185,7 +186,7 @@ def test_multisplit_all_shards_matches_global_oracle(backend):
 def test_multisplit_all_shards_local_stage_is_one_batched_launch(monkeypatch):
     from repro.kernels import ops as kops
 
-    post = _count_calls(monkeypatch, kops, "fused_postscan_reorder")
+    post = _count_calls(monkeypatch, kops, "spec_fused_postscan_reorder")
     keys = _keys(4 * 512, seed=13).reshape(4, 512)
     bf = delta_buckets(8, 2**30)
     multisplit_all_shards(keys, bf, tile=256, backend="pallas-interpret")

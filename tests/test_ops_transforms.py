@@ -1,0 +1,349 @@
+"""repro.ops transform acceptance (ISSUE 4): vmap dispatches to ONE batched
+plan bitwise-equal to the per-row loop, grad through the key-value op
+matches a dense one-hot permutation reference, equal specs never retrace,
+and non-callable specs run end-to-end with ZERO materialized labels."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import ops
+from repro.core.multisplit import multisplit_ref
+from repro.core.pipeline import spec as plan_spec
+from repro.core.pipeline.tiles import _TILE_CACHE, clear_tile_cache
+
+TILED_BACKENDS = ("vmap", "pallas-interpret")
+ALL_BACKENDS = ("reference",) + TILED_BACKENDS
+
+FUSABLE_SPECS = [
+    ops.delta_buckets(13, 2**30),
+    ops.range_buckets([1000, 50_000, 2**20, 2**29]),
+    ops.radix_buckets(1, 4),
+    ops.identity_buckets(8),
+]
+
+
+def _keys(n, seed=0, hi=2**30):
+    return jnp.asarray(np.random.RandomState(seed).randint(0, hi, size=n, dtype=np.uint32))
+
+
+def _spec_keys(spec, n, seed=0):
+    hi = spec.num_buckets if spec.name.startswith("identity") else 2**30
+    return _keys(n, seed, hi)
+
+
+# ---------------------------------------------------------------------------
+# vmap: ONE batched-plan launch, bitwise equal to the per-row loop
+# ---------------------------------------------------------------------------
+
+def _count_plan_calls(monkeypatch):
+    """Count plan EXECUTIONS on concrete arrays. custom_vmap additionally
+    traces the flat op once with abstract tracers to recover the output
+    structure — that probe does no work and is excluded."""
+    calls = {"flat": 0, "batched": 0}
+    orig = plan_spec.MultisplitPlan.__call__
+
+    def spy(self, keys, *a, **k):
+        if not isinstance(keys, jax.core.Tracer):
+            calls["batched" if self.batch is not None else "flat"] += 1
+        return orig(self, keys, *a, **k)
+
+    monkeypatch.setattr(plan_spec.MultisplitPlan, "__call__", spy)
+    return calls
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_vmap_is_one_batched_plan_launch_bitwise(backend, monkeypatch):
+    """THE acceptance criterion: jax.vmap(ops.multisplit) routes onto
+    make_batched_plan — ONE batched launch — and is bitwise equal to
+    per-row flat calls."""
+    b, n, spec = 6, 700, ops.delta_buckets(13, 2**30)
+    keys = _keys(b * n, seed=1).reshape(b, n)
+    f = lambda k: ops.multisplit(k, spec, tile=128, backend=backend)
+
+    calls = _count_plan_calls(monkeypatch)
+    vm = jax.vmap(f)(keys)
+    assert calls == {"flat": 0, "batched": 1}, calls
+
+    for i in range(b):
+        fl = f(keys[i])
+        np.testing.assert_array_equal(np.asarray(vm.keys[i]), np.asarray(fl.keys))
+        np.testing.assert_array_equal(np.asarray(vm.permutation[i]), np.asarray(fl.permutation))
+        np.testing.assert_array_equal(np.asarray(vm.bucket_counts[i]), np.asarray(fl.bucket_counts))
+        np.testing.assert_array_equal(np.asarray(vm.bucket_starts[i]), np.asarray(fl.bucket_starts))
+
+
+@pytest.mark.parametrize("mode", ["counts_only", "positions_only"])
+def test_vmap_partial_modes(mode, monkeypatch):
+    b, n, spec = 4, 300, ops.delta_buckets(8, 2**30)
+    keys = _keys(b * n, seed=2).reshape(b, n)
+    f = lambda k: ops.multisplit(k, spec, tile=128, mode=mode)
+    calls = _count_plan_calls(monkeypatch)
+    vm = jax.vmap(f)(keys)
+    assert calls == {"flat": 0, "batched": 1}
+    assert vm.keys is None and vm.values is None
+    for i in range(b):
+        fl = f(keys[i])
+        np.testing.assert_array_equal(np.asarray(vm.bucket_counts[i]), np.asarray(fl.bucket_counts))
+        if mode == "positions_only":
+            np.testing.assert_array_equal(np.asarray(vm.permutation[i]), np.asarray(fl.permutation))
+
+
+def test_vmap_key_value_single_launch(monkeypatch):
+    b, n, spec = 5, 400, ops.delta_buckets(8, 2**30)
+    keys = _keys(b * n, seed=3).reshape(b, n)
+    vals = jnp.asarray(np.random.RandomState(4).rand(b, n).astype(np.float32))
+    calls = _count_plan_calls(monkeypatch)
+    vm = jax.vmap(lambda k, v: ops.multisplit(k, spec, v, tile=128))(keys, vals)
+    assert calls == {"flat": 0, "batched": 1}
+    for i in range(b):
+        fl = ops.multisplit(keys[i], spec, vals[i], tile=128)
+        np.testing.assert_array_equal(np.asarray(vm.keys[i]), np.asarray(fl.keys))
+        np.testing.assert_array_equal(np.asarray(vm.values[i]), np.asarray(fl.values))
+
+
+def test_vmap_inside_jit():
+    b, n, spec = 3, 256, ops.delta_buckets(8, 2**30)
+    keys = _keys(b * n, seed=5).reshape(b, n)
+    jf = jax.jit(jax.vmap(lambda k: ops.multisplit(k, spec, tile=128).bucket_counts))
+    counts = jf(keys)
+    for i in range(b):
+        np.testing.assert_array_equal(
+            np.asarray(counts[i]),
+            np.asarray(ops.multisplit(keys[i], spec, tile=128).bucket_counts),
+        )
+
+
+def test_rank2_keys_rejected_with_vmap_hint():
+    with pytest.raises(ValueError, match="jax.vmap"):
+        ops.multisplit(_keys(20).reshape(4, 5), ops.delta_buckets(4))
+
+
+# ---------------------------------------------------------------------------
+# grad: the key-value op vs a dense one-hot permutation reference
+# ---------------------------------------------------------------------------
+
+def test_grad_matches_dense_one_hot_reference():
+    """d(values)/dL of the fused key-value multisplit == the gradient of an
+    explicit dense permutation-matrix apply (out = P^T v, P = one_hot(perm))."""
+    n, spec = 600, ops.delta_buckets(16, 2**30)
+    keys = _keys(n, seed=7)
+    vals = jnp.asarray(np.random.RandomState(8).rand(n).astype(np.float32))
+    w = jnp.asarray(np.random.RandomState(9).rand(n).astype(np.float32))
+
+    loss = lambda v: (ops.multisplit_key_value(keys, v, spec, tile=128).values * w).sum()
+    g = jax.grad(loss)(vals)
+
+    perm = ops.multisplit(keys, spec, tile=128).permutation
+    P = jax.nn.one_hot(perm, n, dtype=jnp.float32)            # out = P^T @ v
+    dense_loss = lambda v: (jnp.einsum("ij,i->j", P, v) * w).sum()
+    g_ref = jax.grad(dense_loss)(vals)
+
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-6)
+    # and the closed form: d_in[i] = w[perm[i]]
+    np.testing.assert_allclose(np.asarray(g), np.asarray(w)[np.asarray(perm)], rtol=1e-6)
+
+
+def test_grad_through_float_keys_reorder():
+    """Float KEYS are differentiated through the same inverse gather."""
+    n = 300
+    spec = ops.even_buckets(0.0, 1.0, 8)
+    fkeys = jnp.asarray(np.random.RandomState(10).rand(n).astype(np.float32))
+    vals = jnp.ones((n,), jnp.float32)
+    w = jnp.asarray(np.random.RandomState(11).rand(n).astype(np.float32))
+    g = jax.grad(
+        lambda k: (ops.multisplit_key_value(k, vals, spec, tile=128).keys * w).sum()
+    )(fkeys)
+    perm = np.asarray(ops.multisplit(fkeys, spec, tile=128).permutation)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(w)[perm], rtol=1e-6)
+
+
+def test_vmap_of_grad():
+    b, n, spec = 4, 256, ops.delta_buckets(8, 2**30)
+    keys = _keys(b * n, seed=12).reshape(b, n)
+    vals = jnp.asarray(np.random.RandomState(13).rand(b, n).astype(np.float32))
+    w = jnp.asarray(np.random.RandomState(14).rand(b, n).astype(np.float32))
+    g = jax.vmap(
+        jax.grad(lambda v, k, ww: (ops.multisplit_key_value(k, v, spec, tile=128).values * ww).sum()),
+    )(vals, keys, w)
+    for i in range(b):
+        perm = np.asarray(ops.multisplit(keys[i], spec, tile=128).permutation)
+        np.testing.assert_allclose(np.asarray(g[i]), np.asarray(w[i])[perm], rtol=1e-6)
+
+
+def test_grad_under_jit():
+    n, spec = 512, ops.delta_buckets(8, 2**30)
+    keys = _keys(n, seed=15)
+    vals = jnp.asarray(np.random.RandomState(16).rand(n).astype(np.float32))
+    g = jax.jit(jax.grad(
+        lambda v: (ops.multisplit_key_value(keys, v, spec, tile=128).values ** 2).sum()
+    ))(vals)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(vals), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# zero retraces across equal spec instances (the jit-retrace satellite)
+# ---------------------------------------------------------------------------
+
+def test_ops_multisplit_zero_retrace_across_equal_specs():
+    keys = _keys(512, seed=17)
+    traces = []
+
+    @jax.jit
+    def f(keys, spec):
+        traces.append(1)
+        return ops.multisplit(keys, spec, tile=128).bucket_counts
+
+    c1 = f(keys, ops.delta_buckets(16, 2**30))
+    c2 = f(keys, ops.delta_buckets(16, 2**30))    # a DIFFERENT equal instance
+    assert len(traces) == 1, f"equal specs retraced: {len(traces)} traces"
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    f(keys, ops.delta_buckets(8, 2**30))          # unequal spec: new trace
+    assert len(traces) == 2
+
+
+def test_tile_cache_keyed_by_spec_value_not_object_id():
+    """Equal spec instances must resolve through ONE tile-cache entry — the
+    cache key derives from the spec VALUE (shape), never from id(spec)."""
+    clear_tile_cache()
+    from repro.core.pipeline import make_plan
+
+    tiles = set()
+    for _ in range(10):
+        p = make_plan(1 << 15, 32, backend="vmap",
+                      bucket_fn=ops.delta_buckets(32, 2**30))
+        tiles.add(p.tile)
+    assert len(tiles) == 1
+    assert len(_TILE_CACHE) == 1, dict(_TILE_CACHE)
+
+
+# ---------------------------------------------------------------------------
+# zero materialized labels for non-callable specs (the tentpole guarantee)
+# ---------------------------------------------------------------------------
+
+def _forbid_host_labels(monkeypatch):
+    def boom(self, keys):
+        raise AssertionError(
+            f"plan materialized host-side labels for spec {self.bucket_fn!r}"
+        )
+
+    monkeypatch.setattr(plan_spec.MultisplitPlan, "_host_labels", boom)
+
+
+@pytest.mark.parametrize("backend", TILED_BACKENDS)
+@pytest.mark.parametrize("spec", FUSABLE_SPECS, ids=lambda s: s.name)
+def test_non_callable_specs_never_materialize_labels(backend, spec, monkeypatch):
+    """Acceptance: on label-fusing backends, every declarative spec runs the
+    FULL pipeline — flat, key-value, batched (via vmap), segmented, partial
+    modes — without the n-sized label array ever existing."""
+    _forbid_host_labels(monkeypatch)
+    n = 1100
+    keys = _spec_keys(spec, n, seed=21)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    ref = multisplit_ref(keys, spec, vals)
+
+    out = ops.multisplit(keys, spec, vals, tile=256, backend=backend)
+    np.testing.assert_array_equal(np.asarray(out.keys), np.asarray(ref.keys))
+    np.testing.assert_array_equal(np.asarray(out.values), np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(out.permutation), np.asarray(ref.permutation))
+
+    for mode in ("counts_only", "positions_only"):
+        pm = ops.multisplit(keys, spec, tile=256, backend=backend, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(pm.bucket_counts), np.asarray(ref.bucket_counts)
+        )
+
+    b = 4
+    kb = _spec_keys(spec, b * 256, seed=22).reshape(b, 256)
+    vm = jax.vmap(lambda k: ops.multisplit(k, spec, tile=128, backend=backend))(kb)
+    assert vm.keys.shape == (b, 256)
+
+    seg = ops.segmented_multisplit(
+        keys, spec, [0, 400, 400, 900], tile=256, backend=backend
+    )
+    assert seg.bucket_counts.shape == (4, spec.num_buckets)
+
+
+@pytest.mark.parametrize("backend", TILED_BACKENDS)
+def test_chained_radix_sort_never_materializes_labels(backend, monkeypatch):
+    """The RadixPipeline digit loop is one BitfieldSpec per pass with zero
+    label traffic — on EVERY label-fusing backend (vmap included; pre-PR-4
+    only the pallas kernels fused the digit)."""
+    _forbid_host_labels(monkeypatch)
+    keys = _keys(3000, seed=23, hi=2**32)
+    vals = jnp.arange(3000, dtype=jnp.int32)
+    ks, vs = ops.radix_sort(keys, vals, radix_bits=8, backend=backend, tile=512)
+    order = np.argsort(np.asarray(keys), kind="stable")
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(keys)[order])
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vals)[order])
+
+
+def test_callable_spec_does_materialize_labels(monkeypatch):
+    """Sanity for the counter above: the CallableSpec escape hatch IS routed
+    through the single _host_labels door."""
+    calls = []
+    orig = plan_spec.MultisplitPlan._host_labels
+
+    def spy(self, keys):
+        calls.append(self.bucket_fn.name)
+        return orig(self, keys)
+
+    monkeypatch.setattr(plan_spec.MultisplitPlan, "_host_labels", spy)
+    keys = _keys(500, seed=24)
+    spec = ops.from_fn(lambda u: (u % 5).astype(jnp.int32), 5, name="mod5")
+    out = ops.multisplit(keys, spec, tile=128)
+    assert calls == ["mod5"]
+    ref = multisplit_ref(keys, spec)
+    np.testing.assert_array_equal(np.asarray(out.keys), np.asarray(ref.keys))
+
+
+def test_segmented_values_with_partial_mode_raises_cleanly():
+    """The public op's own guard, not the plan layer's key_value message
+    (key_value is not a parameter of the facade)."""
+    with pytest.raises(ValueError, match="never touches values"):
+        ops.segmented_multisplit(
+            _keys(100), ops.delta_buckets(4), [0, 50],
+            jnp.arange(100, dtype=jnp.int32), mode="counts_only",
+        )
+    with pytest.raises(ValueError, match="never touches values"):
+        ops.multisplit(
+            _keys(100), ops.delta_buckets(4),
+            jnp.arange(100, dtype=jnp.int32), mode="counts_only",
+        )
+
+
+def test_callable_specs_are_not_pinned_in_the_op_cache():
+    """CallableSpec hashes by function identity: caching it would pin the
+    closure (and captured arrays) while never hitting — callables take the
+    uncached builder."""
+    from repro.ops import _flat_op_cached
+
+    keys = _keys(256, seed=30)
+    before = _flat_op_cached.cache_info()
+    for _ in range(3):
+        spec = ops.from_fn(lambda u: (u % 3).astype(jnp.int32), 3)
+        ops.multisplit(keys, spec, tile=128)
+    after = _flat_op_cached.cache_info()
+    assert after.currsize == before.currsize
+    # ...while value-hashable specs hit the cache across instances
+    ops.multisplit(keys, ops.delta_buckets(5), tile=128)
+    ops.multisplit(keys, ops.delta_buckets(5), tile=128)
+    info = _flat_op_cached.cache_info()
+    assert info.currsize == after.currsize + 1 and info.hits > before.hits
+
+
+def test_off_width_keys_fall_back_to_host_labels_in_partial_modes():
+    """Kernel backends are 32-bit-lane programs: fusable specs over non-32-bit
+    keys silently fall back to materialized labels in the partial modes
+    (reorder still raises, as before)."""
+    keys = jnp.asarray(np.random.RandomState(25).randint(0, 8, 600, dtype=np.uint16))
+    spec = ops.identity_buckets(8)
+    co = ops.multisplit(keys, spec, tile=128, backend="pallas-interpret",
+                        mode="counts_only")
+    np.testing.assert_array_equal(
+        np.asarray(co.bucket_counts), np.bincount(np.asarray(keys), minlength=8)
+    )
+    with pytest.raises(ValueError):
+        ops.multisplit(keys, spec, tile=128, backend="pallas-interpret")

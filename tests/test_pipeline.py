@@ -100,8 +100,9 @@ def test_stage_graph_per_mode():
         "scatter:bucket-major",
     )
     assert co.stages() == ("prescan:vmap", "reduce:counts")
-    assert po.stages() == (
-        "prescan:kernel", "scan:global", "postscan:positions-kernel",
+    assert po.stages() == (           # fusable spec on a kernel backend (PR-4)
+        "prescan:fused-label-kernel", "scan:global",
+        "postscan:fused-label-positions-kernel",
     )
     assert [s.name for s in co.stage_graph()] == ["prescan", "reduce"]
     assert co.stage_graph()[0].impl == "vmap"

@@ -59,11 +59,22 @@ def test_plan_validates_inputs():
 
 
 def test_stages_description():
+    from repro.core.identifiers import from_fn
+
     bf = delta_buckets(8)
     vm = msplan.make_plan(1024, 8, method="bms", backend="vmap", bucket_fn=bf)
     assert vm.stages()[-2] == "postscan:fused-reorder-vmap"
+    # fusable specs label-fuse on kernel backends (PR-4): ids in-register
     pk = msplan.make_plan(1024, 8, method="wms", backend="pallas-interpret", bucket_fn=bf)
-    assert pk.stages()[-2] == "postscan:fused-reorder-kernel"
+    assert pk.stages()[0] == "prescan:fused-label-kernel"
+    assert pk.stages()[-2] == "postscan:fused-label-reorder-kernel"
+    # the callable escape hatch keeps the materialized-labels stages
+    cb = msplan.make_plan(
+        1024, 8, method="wms", backend="pallas-interpret",
+        bucket_fn=from_fn(lambda u: u.astype("int32") % 8, 8),
+    )
+    assert cb.stages()[0] == "prescan:kernel"
+    assert cb.stages()[-2] == "postscan:fused-reorder-kernel"
     rx = msplan.make_radix_plan(1024, 0, 8, method="bms", backend="pallas-interpret")
     assert rx.stages()[0] == "prescan:radix-fused-kernel"
     assert rx.stages()[-2] == "postscan:radix-fused-reorder-kernel"

@@ -23,7 +23,13 @@ import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.identifiers import delta_buckets
+from repro.core.identifiers import (
+    delta_buckets,
+    even_buckets,
+    identity_buckets,
+    radix_buckets,
+    range_buckets,
+)
 from repro.core.multisplit import (
     batched_multisplit,
     multisplit,
@@ -92,6 +98,44 @@ def test_flat_invariants_and_backend_agreement(n, m, method, key_value, seed):
     for backend in TILED_BACKENDS:
         out = multisplit(keys, bf, vals, method=method, tile=128, backend=backend)
         _assert_result_equal(out, ref, key_value)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(("delta", "range", "bitfield", "identity", "even")),
+    n=st.integers(0, 600),
+    m=st.integers(1, 32),
+    splitters=st.lists(st.integers(0, 2**30), min_size=1, max_size=8),
+    bits=st.integers(1, 6),
+    pass_idx=st.integers(0, 3),
+    method=st.sampled_from(METHODS),
+    seed=st.integers(0, 2**16),
+)
+def test_sampled_bucketspecs_invariants_and_backend_agreement(
+    kind, n, m, splitters, bits, pass_idx, method, seed
+):
+    """ISSUE 4: the §3.1 invariants and bitwise backend agreement hold for
+    EVERY declarative BucketSpec kind — delta, splitter/range, radix
+    bitfield, identity, and even float buckets — all of which run
+    label-fused (no materialized label array) on the tiled backends."""
+    keys = _keys(n, seed)
+    if kind == "delta":
+        bf = delta_buckets(m, 2**30)
+    elif kind == "range":
+        bf = range_buckets(splitters)
+    elif kind == "bitfield":
+        bf = radix_buckets(pass_idx, bits)
+    elif kind == "identity":
+        bf = identity_buckets(m)
+        keys = (keys % jnp.uint32(m)).astype(jnp.uint32)
+    else:
+        bf = even_buckets(0.0, float(2**30), m)
+        keys = keys.astype(jnp.float32)
+    ref = multisplit_ref(keys, bf)
+    _assert_invariants(ref, keys, bf)
+    for backend in TILED_BACKENDS:
+        out = multisplit(keys, bf, method=method, tile=128, backend=backend)
+        _assert_result_equal(out, ref, False)
 
 
 @settings(max_examples=8, deadline=None)
