@@ -238,14 +238,80 @@ def run_fused_labels_vs_materialized(emit_json: bool = True):
     return results
 
 
-def main():
+def run_packed_vs_onehot(emit_json: bool = True, quick: bool = False):
+    """ISSUE 5 measurement: the packed-counter kernel family (bit-packed
+    subword counters + two-level rank, DESIGN.md §12) vs the dense one-hot
+    family, on the SAME plans — only ``family`` differs, outputs are bitwise
+    identical.  Flat key-value multisplit sweeping m ∈ {8, 32, 64, 128, 256}
+    plus the chained radix sort at radix_bits ∈ {5, 8}; ``quick=True``
+    restricts to the m=256 flat + radix points (the CI perf-smoke floor).
+    Appends a commit-stamped trajectory point to BENCH_multisplit.json."""
+    from repro.core.sort import radix_sort
+
+    results = {}
+    keys = _keys()
+    vals = jnp.arange(N, dtype=jnp.int32)
+
+    m_sweep = (256,) if quick else (8, 32, 64, 128, 256)
+    for m in m_sweep:
+        bf = delta_buckets(m, 2**30)
+        timed = {}
+        for family in ("packed", "onehot"):
+            f = jax.jit(lambda k, v, bf=bf, fam=family: multisplit(
+                k, bf, values=v, method="bms", family=fam).keys)
+            timed[family] = bench(f, keys, vals)
+        tag = f"packed_vs_onehot/flat/m={m}"
+        results[f"{tag}/packed_mkeys_s"] = round(N / timed["packed"] / 1e6, 2)
+        results[f"{tag}/onehot_mkeys_s"] = round(N / timed["onehot"] / 1e6, 2)
+        results[f"{tag}/speedup"] = round(timed["onehot"] / timed["packed"], 3)
+        row(f"multisplit/kv/{tag}/packed", timed["packed"],
+            f"{N / timed['packed'] / 1e6:.1f} Mkeys/s")
+        row(f"multisplit/kv/{tag}/onehot", timed["onehot"],
+            f"{N / timed['onehot'] / 1e6:.1f} Mkeys/s "
+            f"({timed['onehot'] / timed['packed']:.2f}x slower)")
+
+    bit_sweep = ((8, 256),) if quick else ((5, 32), (8, 256))
+    for bits, m in bit_sweep:
+        timed = {}
+        for family in ("packed", "onehot"):
+            f = jax.jit(lambda k, v, b=bits, fam=family: radix_sort(
+                k, v, radix_bits=b, family=fam)[0])
+            timed[family] = bench(f, keys, vals)
+        tag = f"packed_vs_onehot/radix/m={m}"
+        results[f"{tag}/packed_mkeys_s"] = round(N / timed["packed"] / 1e6, 2)
+        results[f"{tag}/onehot_mkeys_s"] = round(N / timed["onehot"] / 1e6, 2)
+        results[f"{tag}/speedup"] = round(timed["onehot"] / timed["packed"], 3)
+        row(f"sort/kv/{tag}/packed", timed["packed"],
+            f"{N / timed['packed'] / 1e6:.1f} Mkeys/s")
+        row(f"sort/kv/{tag}/onehot", timed["onehot"],
+            f"{N / timed['onehot'] / 1e6:.1f} Mkeys/s "
+            f"({timed['onehot'] / timed['packed']:.2f}x slower)")
+
+    if emit_json:
+        append_trajectory(results, n=N, key_value=True)
+    return results
+
+
+def main(quick: bool = False):
+    if quick:
+        # smoke sizes must not pollute the full-sweep trajectory history
+        run_packed_vs_onehot(quick=True, emit_json=False)
+        return
     run(key_value=False)
     run(key_value=True)
     run_distributions()
     run_fused_vs_legacy()
     run_batched_vs_host_loop()
     run_fused_labels_vs_materialized()
+    run_packed_vs_onehot()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="only the packed-vs-onehot m=256 points (CI perf smoke)",
+    )
+    main(quick=ap.parse_args().quick)

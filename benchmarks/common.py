@@ -1,6 +1,7 @@
 """Benchmark timing utilities."""
 
 import json
+import subprocess
 import time
 from pathlib import Path
 
@@ -10,15 +11,45 @@ import numpy as np
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_multisplit.json"
 
 
+def git_commit() -> str:
+    """Short hash of the checked-out commit (with ``-dirty`` when the tree
+    has uncommitted changes), so every trajectory point is attributable
+    (regressions were previously dated but not attributable).
+
+    Note the run-bench-then-commit workflow: a point measured from a dirty
+    tree and committed WITH the code that produced it is stamped
+    ``<parent>-dirty`` — the commit that introduced the entry (via
+    ``git log -- BENCH_multisplit.json``) is the one containing the
+    measured code."""
+    try:
+        cwd = Path(__file__).resolve().parent
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5, cwd=cwd,
+        )
+        sha = out.stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=5, cwd=cwd,
+        ).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
 def append_trajectory(results: dict, *, n: int, key_value: bool, backend: str = "vmap",
                       path: Path = None) -> None:
-    """Append one timestamped trajectory point to BENCH_multisplit.json."""
+    """Append one timestamped, commit-stamped trajectory point to
+    BENCH_multisplit.json."""
     path = path or BENCH_JSON
     history = []
     if path.exists():
         history = json.loads(path.read_text())
     history.append({
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "commit": git_commit(),
         "n": n,
         "key_value": key_value,
         "host": jax.default_backend(),

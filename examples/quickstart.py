@@ -70,4 +70,19 @@ counts = ops.multisplit(keys, spec, mode="counts_only").bucket_counts
 assert bool((counts == out.bucket_counts).all()), "counts_only == full pipeline"
 ranks = ops.multisplit(keys, spec, mode="positions_only").permutation
 assert int(ranks.shape[0]) == keys.shape[0]
+
+# --- 7. kernel families + autotuning (DESIGN.md §12) ------------------------
+# Wide bucket axes auto-select the PACKED subword-counter family (bitwise
+# identical to the dense one-hot family, ~flat per-key cost in m); the
+# decision — and WHY it was made — is inspectable, and `autotune_tile`
+# searches the (tile, family) grid jointly and pins the measured winner.
+from repro.core.pipeline import autotune_tile, family_decision, make_plan
+
+wide = make_plan(keys.shape[0], 256, bucket_fn=ops.delta_buckets(256, 2**30))
+fam, why = family_decision(keys.shape[0], 256, "bms", "vmap")
+print(f"m=256 plan: family={wide.family!r}, tile={wide.tile} ({why})")
+tuned = autotune_tile(1 << 14, ops.delta_buckets(256, 2**30),
+                      candidates=(1024, 4096), trials=1)
+print(f"autotuned (tile, family) for m=256: "
+      f"({tuned}, {family_decision(1 << 14, 256, 'bms', 'vmap')[0]!r})")
 print("quickstart OK")

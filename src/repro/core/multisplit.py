@@ -139,6 +139,7 @@ def multisplit(
     interpret: bool = True,
     backend: Optional[str] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Stable multisplit of ``keys`` (and optional ``values``) into buckets.
 
@@ -155,6 +156,10 @@ def multisplit(
     (prescan + reduce — the §7.3 histogram; only starts/counts are
     computed) or ``positions_only`` (the eq. (2) permutation without
     materializing reordered keys). Both are key-only.
+
+    ``family`` pins the kernel family of the local solve (``"onehot"`` /
+    ``"packed"``, DESIGN.md §12); ``None`` auto-resolves it per shape.
+    Families are bitwise identical — the knob changes cost, not results.
     """
     plan = make_plan(
         keys.shape[0],
@@ -165,6 +170,7 @@ def multisplit(
         tile=tile,
         bucket_fn=bucket_fn,
         mode=mode,
+        family=family,
     )
     return plan(keys, values)
 
@@ -185,6 +191,7 @@ def batched_multisplit(
     interpret: bool = True,
     backend: Optional[str] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Multisplit every row of ``keys`` (b, n) independently in one launch.
 
@@ -203,6 +210,7 @@ def batched_multisplit(
         tile=tile,
         bucket_fn=bucket_fn,
         mode=mode,
+        family=family,
     )
     return plan(keys, values)
 
@@ -219,6 +227,7 @@ def segmented_multisplit(
     interpret: bool = True,
     backend: Optional[str] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Multisplit every ragged segment of flat ``keys`` independently in one
     launch. ``segment_starts`` is an (s,) ascending vector of start offsets
@@ -241,6 +250,7 @@ def segmented_multisplit(
         tile=tile,
         bucket_fn=bucket_fn,
         mode=mode,
+        family=family,
     )
     return plan(keys, values, segment_starts=seg)
 

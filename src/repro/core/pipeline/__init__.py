@@ -52,6 +52,8 @@ from repro.core.pipeline.stages import (
     direct_solve_reference,
     exclusive_rows,
     global_scan,
+    packed_direct_solve_ids,
+    packed_tile_local_offsets,
     pad_rows,
     pad_to_tiles,
     seg_tile_local,
@@ -60,22 +62,28 @@ from repro.core.pipeline.stages import (
 )
 from repro.core.pipeline.tiles import (
     BMS_TILE,
+    FAMILIES,
     WMS_TILE,
     autotune_tile,
     clear_tile_cache,
+    family_decision,
+    family_decisions,
+    resolve_kernel_family,
     resolve_tile,
 )
 
 __all__ = [
-    "BACKENDS", "BMS_TILE", "Backend", "KernelStages", "MODES",
+    "BACKENDS", "BMS_TILE", "Backend", "FAMILIES", "KernelStages", "MODES",
     "MultisplitPlan", "MultisplitResult", "PipelineSpec", "RadixPipeline",
     "Stage", "StageImpl", "VmapStages", "WMS_TILE",
     "autotune_tile", "available_backends", "backend_names",
     "clear_tile_cache", "direct_counts", "direct_solve_ids",
-    "direct_solve_reference", "exclusive_rows", "get_backend", "global_scan",
+    "direct_solve_reference", "exclusive_rows", "family_decision",
+    "family_decisions", "get_backend", "global_scan",
     "make_batched_plan", "make_plan", "make_radix_plan",
-    "make_segmented_plan", "make_segmented_radix_plan", "pad_rows",
+    "make_segmented_plan", "make_segmented_radix_plan",
+    "packed_direct_solve_ids", "packed_tile_local_offsets", "pad_rows",
     "pad_to_tiles", "radix_passes", "register_backend", "resolve_backend",
-    "resolve_tile", "seg_tile_local", "segment_ids_from_starts",
-    "tile_local_offsets",
+    "resolve_kernel_family", "resolve_tile", "seg_tile_local",
+    "segment_ids_from_starts", "tile_local_offsets",
 ]

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from repro.core.pipeline import stages as _st
 from repro.core.pipeline.registry import get_backend
 from repro.core.pipeline.spec import make_radix_plan
-from repro.core.pipeline.tiles import resolve_tile
+from repro.core.pipeline.tiles import resolve_kernel_family, resolve_tile
 
 Array = jnp.ndarray
 
@@ -68,6 +68,7 @@ class RadixPipeline:
         tile: Optional[int] = None,
         batch: Optional[int] = None,
         segments: Optional[int] = None,
+        family: Optional[str] = None,
     ):
         self.n = n
         self.key_value = key_value
@@ -75,13 +76,18 @@ class RadixPipeline:
         self.batch = batch
         self.segments = segments
         self.passes = radix_passes(radix_bits, key_bits)
-        # ONE tile for every pass, keyed by the widest digit (first pass).
+        # ONE (tile, kernel family) for every pass, keyed by the widest
+        # digit (first pass) — narrower final passes reuse them.
         m_eff = (1 << self.passes[0][1]) * (segments or 1)
-        self.tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
+        self.family = resolve_kernel_family(n, m_eff, method, backend, family)
+        self.tile = resolve_tile(
+            n, m_eff, method, key_value, backend, tile, family=self.family
+        )
         self.plans = tuple(
             make_radix_plan(
                 n, shift, bits, method=method, key_value=key_value,
                 backend=backend, tile=self.tile, batch=batch, segments=segments,
+                family=self.family,
             )
             for shift, bits in self.passes
         )

@@ -69,6 +69,13 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.family == "packed":              # packed-counter family (§12)
+            return kops.packed_tile_histograms(
+                keys_tiled if ids_tiled is None else ids_tiled, seg_tiled,
+                num_buckets=m,
+                spec=spec.bucket_fn if ids_tiled is None else None,
+                num_segments=s or 1, interpret=self.interpret,
+            )
         if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
                 return kops.seg_spec_tile_histograms(
@@ -87,6 +94,13 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.family == "packed":              # packed-counter family (§12)
+            return kops.packed_tile_positions(
+                keys_tiled if ids_tiled is None else ids_tiled, g, seg_tiled,
+                num_buckets=m,
+                spec=spec.bucket_fn if ids_tiled is None else None,
+                num_segments=s or 1, interpret=self.interpret,
+            )
         if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
                 return kops.seg_spec_tile_positions(
@@ -106,6 +120,15 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.family == "packed":              # packed-counter family (§12)
+            fused = ids_tiled is None
+            return kops.packed_fused_postscan_reorder(
+                keys_tiled if fused else ids_tiled, g,
+                keys_tiled=None if fused else keys_tiled,
+                values_tiled=vals_tiled, seg_tiled=seg_tiled,
+                num_buckets=m, spec=spec.bucket_fn if fused else None,
+                num_segments=s or 1, interpret=self.interpret,
+            )
         if ids_tiled is None:                    # fused labels in-kernel
             if seg_tiled is not None:
                 return kops.seg_spec_fused_postscan_reorder(
@@ -144,31 +167,52 @@ class VmapStages(StageImpl):
             return ids_tiled
         return jax.vmap(spec.bucket_fn.emit)(keys_tiled)
 
+    @staticmethod
+    def _local_offsets(spec, ids, m):
+        """Per-tile local solve of the plan's kernel family: dense one-hot
+        cumsum, or the lane-packed two-level rank (bitwise identical)."""
+        if spec.family == "packed":
+            return _st.packed_tile_local_offsets(ids, m)
+        return _st.tile_local_offsets(ids, m)
+
     def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
         ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
             m_eff = spec.m_eff
             cid = (seg_tiled * m + ids_tiled).astype(jnp.int32)
+            if spec.family == "packed" and spec.mode != "counts_only":
+                # same expression the packed postscan evaluates, so XLA CSEs
+                # the two stages under one jit; for counts_only (no postscan
+                # follows) the O(T) scatter-add below stays the cheapest form
+                return jax.vmap(
+                    lambda c: _st.packed_tile_local_offsets(c, m_eff)[1]
+                )(cid)
             return jax.vmap(lambda c: _st.direct_counts(c, m_eff))(cid)
         if spec.mode == "counts_only":
             # histogram path: an O(T) scatter-add per tile — the O(T·m)
             # one-hot below buys nothing when no postscan follows
             return jax.vmap(lambda t: _st.direct_counts(t, m))(ids_tiled)
-        return jax.vmap(lambda t: _st.tile_local_offsets(t, m)[1])(ids_tiled)
+        return jax.vmap(lambda t: self._local_offsets(spec, t, m)[1])(ids_tiled)
 
     def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
         ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
+            m_eff = spec.m_eff
+
             def one_tile_seg(ids, segs, g_tile):
-                local = _st.seg_tile_local(ids, segs, m)
-                return g_tile[(segs * m + ids).astype(jnp.int32)] + local
+                cid = (segs * m + ids).astype(jnp.int32)
+                if spec.family == "packed":
+                    local = _st.packed_tile_local_offsets(cid, m_eff)[0]
+                else:
+                    local = _st.seg_tile_local(ids, segs, m)
+                return g_tile[cid] + local
 
             return jax.vmap(one_tile_seg)(ids_tiled, seg_tiled, g)
 
         def one_tile(ids, g_tile):
-            local, _ = _st.tile_local_offsets(ids, m)
+            local, _ = self._local_offsets(spec, ids, m)
             return g_tile[ids] + local
 
         return jax.vmap(one_tile)(ids_tiled, g)
@@ -179,8 +223,11 @@ class VmapStages(StageImpl):
 
         def fused_tile(ids, segs, g_tile, keys_t, vals_t):
             if segs is None:
-                local, hist = _st.tile_local_offsets(ids, m)
+                local, hist = self._local_offsets(spec, ids, m)
                 cid = ids
+            elif spec.family == "packed":
+                cid = (segs * m + ids).astype(jnp.int32)
+                local, hist = _st.packed_tile_local_offsets(cid, m_eff)
             else:
                 local = _st.seg_tile_local(ids, segs, m)
                 cid = (segs * m + ids).astype(jnp.int32)
@@ -227,7 +274,10 @@ class Backend:
     backend's tile stage and never materialized as a plan-layer label array.
     ``fuses_radix`` is the pre-PR-4 kernel-only flag (in-KERNEL digit
     extraction), kept for introspection compat; ``key_itemsize`` restricts
-    key width (pallas kernels are 32-bit-lane programs).
+    key width (pallas kernels are 32-bit-lane programs). ``families`` lists
+    the kernel families (DESIGN.md §12) the backend's stages implement;
+    :func:`~repro.core.pipeline.tiles.resolve_kernel_family` validates
+    explicit requests against it and auto-resolves within it.
     """
 
     name: str
@@ -238,6 +288,7 @@ class Backend:
     fuses_radix: bool = False
     fuses_labels: bool = False
     key_itemsize: Optional[int] = None
+    families: Tuple[str, ...] = ("onehot",)
 
     def check_keys(self, keys: Array) -> None:
         if self.key_itemsize is not None and keys.dtype.itemsize != self.key_itemsize:
@@ -278,12 +329,14 @@ register_backend(Backend(
     name="reference",
     description="O(n·m) direct evaluation of paper eq. (1); the oracle",
     tiled=False,
+    families=("onehot", "packed"),   # packed: the lane-packed direct oracle
 ))
 register_backend(Backend(
     name="vmap",
     description="tiled jnp stages, fused per-tile closure",
     stages=VmapStages(),
     fuses_labels=True,
+    families=("onehot", "packed"),
 ))
 register_backend(Backend(
     name="pallas-interpret",
@@ -293,6 +346,7 @@ register_backend(Backend(
     fuses_radix=True,
     fuses_labels=True,
     key_itemsize=4,
+    families=("onehot", "packed"),
 ))
 register_backend(Backend(
     name="pallas",
@@ -302,6 +356,7 @@ register_backend(Backend(
     fuses_radix=True,
     fuses_labels=True,
     key_itemsize=4,
+    families=("onehot", "packed"),
 ))
 
 # Compatibility tuple: the registered names, reference first (PR-1 order).

@@ -32,7 +32,7 @@ from repro.core.identifiers import BitfieldSpec, BucketSpec, as_spec
 from repro.core.pipeline import stages as _st
 from repro.core.pipeline.registry import get_backend
 from repro.core.pipeline.stages import MultisplitResult
-from repro.core.pipeline.tiles import resolve_tile
+from repro.core.pipeline.tiles import resolve_kernel_family, resolve_tile
 
 Array = jnp.ndarray
 
@@ -71,6 +71,15 @@ class PipelineSpec:
     ``segments=s`` expects flat ``(n,)`` inputs plus a ``segment_starts``
     call argument of shape ``(s,)``. ``mode`` selects how much of the
     pipeline runs (module docstring / DESIGN.md §10).
+
+    ``family`` (DESIGN.md §12) selects the KERNEL FAMILY of the local
+    solve — ``"onehot"`` (dense T×m one-hot/cumsum) or ``"packed"``
+    (bit-packed subword counters, two-level rank). Resolved by
+    :func:`~repro.core.pipeline.tiles.resolve_kernel_family` at
+    :func:`make_plan` time, so it is a concrete hashable plan field: equal
+    specs keep hashing equal and jit caches keyed on a plan never retrace
+    across family-equal resolutions. The two families are bitwise-identical
+    (property-tested); the field changes execution cost only.
     """
 
     n: int
@@ -83,6 +92,7 @@ class PipelineSpec:
     batch: Optional[int] = None                    # leading (b, n) axis
     segments: Optional[int] = None                 # ragged segments over (n,)
     mode: str = "reorder"
+    family: str = "onehot"
 
     # -- resolved properties ----------------------------------------------
     @property
@@ -147,27 +157,33 @@ class PipelineSpec:
         Fused-label stages assume lane-width-compatible keys (the call-time
         fallback for off-width keys in partial modes is not shape-visible
         here); the radix BitfieldSpec keeps its historical ``radix-fused``
-        spelling."""
+        spelling. Packed-family plans (DESIGN.md §12) carry a ``-packed``
+        suffix on the local-solve stages."""
         be = get_backend(self.backend)
         kernel = be.uses_kernels
         fusable = (self.bucket_fn is not None and self.bucket_fn.fusable
                    and be.fuses_labels)
         fused_id = kernel and fusable
         radix_id = fused_id and self.radix is not None
+        fam = "-packed" if (be.tiled and self.family == "packed") else ""
+        # the vmap counts_only prescan is a plain scatter-add histogram on
+        # EITHER family (no local rank is ever computed), so it carries no
+        # family tag; the kernel backends do run the packed hist kernel
+        pre_fam = fam if (kernel or self.mode != "counts_only") else ""
         pre = ("prescan:radix-fused-kernel" if radix_id
                else "prescan:fused-label-kernel" if fused_id
-               else "prescan:kernel" if kernel else "prescan:vmap")
+               else "prescan:kernel" if kernel else "prescan:vmap") + pre_fam
         positions = ("postscan:radix-positions-kernel" if radix_id
                      else "postscan:fused-label-positions-kernel" if fused_id
                      else "postscan:positions-kernel" if kernel
-                     else "postscan:positions-vmap")
+                     else "postscan:positions-vmap") + fam
         if self.method == "dms":
             post = positions
         else:
             post = ("postscan:radix-fused-reorder-kernel" if radix_id
                     else "postscan:fused-label-reorder-kernel" if fused_id
                     else "postscan:fused-reorder-kernel" if kernel
-                    else "postscan:fused-reorder-vmap")
+                    else "postscan:fused-reorder-vmap") + fam
         if not be.tiled:
             base = ("direct-solve:reference",)
         elif self.mode == "counts_only":
@@ -328,7 +344,8 @@ class MultisplitPlan(PipelineSpec):
                 return MultisplitResult(
                     None, None, _st.exclusive_rows(counts), counts, None
                 )
-            solve = lambda k, v: _st.direct_solve_ids(k, ids_fn(k), m, v)
+            direct = self._direct_solve_ids
+            solve = lambda k, v: direct(k, ids_fn(k), m, v)
             if values is None:
                 res = jax.vmap(lambda k: solve(k, None))(keys)
             else:
@@ -512,6 +529,14 @@ class MultisplitPlan(PipelineSpec):
         )
 
     # -- direct-solve driver (the untiled oracle backend) ------------------
+    @property
+    def _direct_solve_ids(self):
+        """The family's direct solve: dense one-hot, or the lane-packed
+        oracle (bitwise identical, DESIGN.md §12)."""
+        if self.family == "packed":
+            return _st.packed_direct_solve_ids
+        return _st.direct_solve_ids
+
     def _call_direct(
         self, keys, values, seg_ids, segment_starts
     ) -> MultisplitResult:
@@ -523,7 +548,7 @@ class MultisplitPlan(PipelineSpec):
                 return MultisplitResult(
                     None, None, _st.exclusive_rows(counts), counts, None
                 )
-            res = _st.direct_solve_ids(keys, ids, m, values)
+            res = self._direct_solve_ids(keys, ids, m, values)
             if self.mode == "positions_only":
                 return MultisplitResult(
                     None, None, res.bucket_starts, res.bucket_counts, res.permutation
@@ -533,7 +558,7 @@ class MultisplitPlan(PipelineSpec):
         if self.mode == "counts_only":
             counts = _st.direct_counts(cid, self.m_eff).reshape(s, m)
             return MultisplitResult(None, None, _st.exclusive_rows(counts), counts, None)
-        res = _st.direct_solve_ids(keys, cid, self.m_eff, values)
+        res = self._direct_solve_ids(keys, cid, self.m_eff, values)
         counts = res.bucket_counts.reshape(s, m)
         perm = res.permutation - segment_starts[seg_ids]
         if self.mode == "positions_only":
@@ -576,6 +601,7 @@ def make_plan(
     batch: Optional[int] = None,
     segments: Optional[int] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitPlan:
     """Resolve (n, m, method, key-value-ness, backend, mode) into a staged
     plan.
@@ -587,17 +613,22 @@ def make_plan(
     segmented plan over flat ``(n,)`` inputs with an ``(s,)``
     ``segment_starts`` call argument (mutually exclusive). ``mode`` selects a
     partial pipeline (``counts_only`` / ``positions_only``) or the full
-    reorder (module docstring)."""
+    reorder (module docstring). ``family`` pins the kernel family
+    (``"onehot"`` / ``"packed"``, DESIGN.md §12); ``None`` auto-resolves it
+    per shape through the cached heuristic/autotune decision."""
     _validate_common(method, backend, mode, key_value)
     _validate_layout(batch, segments)
     if bucket_fn is not None:
         bucket_fn = as_spec(bucket_fn)
     m_eff = num_buckets * (segments or 1)
-    resolved_tile = resolve_tile(n, m_eff, method, key_value, backend, tile)
+    resolved_family = resolve_kernel_family(n, m_eff, method, backend, family)
+    resolved_tile = resolve_tile(
+        n, m_eff, method, key_value, backend, tile, family=resolved_family
+    )
     return MultisplitPlan(
         n=n, num_buckets=num_buckets, method=method, key_value=key_value,
         backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
-        batch=batch, segments=segments, mode=mode,
+        batch=batch, segments=segments, mode=mode, family=resolved_family,
     )
 
 
@@ -613,6 +644,7 @@ def make_radix_plan(
     batch: Optional[int] = None,
     segments: Optional[int] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitPlan:
     """A plan whose bucket spec is the radix digit
     :class:`~repro.core.identifiers.BitfieldSpec`(shift, bits) — label-fused
@@ -621,7 +653,7 @@ def make_radix_plan(
     return make_plan(
         n, 1 << bits, method=method, key_value=key_value, backend=backend,
         tile=tile, bucket_fn=BitfieldSpec(shift, bits), batch=batch,
-        segments=segments, mode=mode,
+        segments=segments, mode=mode, family=family,
     )
 
 

@@ -125,26 +125,58 @@ def exclusive_rows(counts: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Packed-counter local solve (DESIGN.md §12): the lane-packed jnp emulation
+# of the packed KERNEL family. Same two-level subword-counter math as
+# :mod:`repro.kernels.common` (it IS that module's body, re-exported here as
+# a stage primitive), so the jnp backends are a bitwise oracle for the
+# packed kernels exactly as `tile_local_offsets` is for the dense ones.
+# ---------------------------------------------------------------------------
+
+def packed_tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
+    """Packed analogue of :func:`tile_local_offsets`: (stable in-bucket
+    rank, tile histogram) from k-per-word subword counters + a two-level
+    subtile scan — bitwise identical, ~flat per-key work in ``m``."""
+    from repro.kernels.common import packed_layout, packed_local_offsets
+
+    return packed_local_offsets(ids, packed_layout(ids.shape[0], m))
+
+
+def packed_direct_solve_ids(
+    keys: Array, ids: Array, m: int, values: Optional[Array]
+) -> MultisplitResult:
+    """Packed-family direct solve (one subproblem == whole input): the
+    reference backend's lane-packed oracle, bitwise equal to
+    :func:`direct_solve_ids`."""
+    return _direct_solve_with(packed_tile_local_offsets, keys, ids, m, values)
+
+
+# ---------------------------------------------------------------------------
 # Direct solve (the reference oracle: one subproblem == whole input)
 # ---------------------------------------------------------------------------
 
-def direct_solve_ids(
-    keys: Array, ids: Array, m: int, values: Optional[Array]
+def _direct_solve_with(
+    local_offsets, keys: Array, ids: Array, m: int, values: Optional[Array]
 ) -> MultisplitResult:
-    """O(n·m) direct evaluation of paper eq. (1) on precomputed bucket ids."""
+    """Direct evaluation of paper eq. (1) on precomputed bucket ids, with
+    the local solve supplied by the kernel family (dense or packed)."""
     if keys.shape[0] == 0:
         zeros = jnp.zeros((m,), jnp.int32)
         return MultisplitResult(keys, values, zeros, zeros, jnp.zeros((0,), jnp.int32))
-    local, hist = tile_local_offsets(ids, m)
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1].astype(jnp.int32)]
-    )
+    local, hist = local_offsets(ids, m)
+    starts = exclusive_rows(hist)
     perm = starts[ids] + local
     keys_out = jnp.zeros_like(keys).at[perm].set(keys)
     values_out = None
     if values is not None:
         values_out = jnp.zeros_like(values).at[perm].set(values)
     return MultisplitResult(keys_out, values_out, starts, hist.astype(jnp.int32), perm)
+
+
+def direct_solve_ids(
+    keys: Array, ids: Array, m: int, values: Optional[Array]
+) -> MultisplitResult:
+    """O(n·m) direct evaluation of paper eq. (1) on precomputed bucket ids."""
+    return _direct_solve_with(tile_local_offsets, keys, ids, m, values)
 
 
 def direct_solve_reference(

@@ -1,11 +1,21 @@
-"""Tile sizing: per-shape heuristic + small autotune cache (paper Table 1).
+"""Tile sizing + kernel-family selection: per-shape heuristics and a small
+autotune cache (paper Table 1).
 
 The tile height is the paper's subproblem-size knob: larger subproblems
-narrow the global scan matrix H but deepen the local solve. One module owns
-the heuristic, the cache, and the timing-based autotuner so EVERY consumer —
-flat, batched, segmented plans and the chained radix pipeline — resolves
-tiles through the same door (no more private ``HIST_TILE``-style constants
-scattered around the tree).
+narrow the global scan matrix H but deepen the local solve. Since the
+packed-counter family (DESIGN.md §12) the local solve has a second knob —
+the KERNEL FAMILY:
+
+* ``"onehot"`` — the dense T×m one-hot/cumsum direct solve (DESIGN.md §2);
+  per-key work and VMEM linear in the bucket count.
+* ``"packed"`` — bit-packed subword counters with two-level (subtile→tile)
+  ranking (paper §4.3); per-key work ~flat in the bucket count.
+
+One module owns the heuristics, the caches, and the timing-based autotuner
+so EVERY consumer — flat, batched, segmented plans and the chained radix
+pipeline — resolves (tile, family) through the same door.  Family decisions
+are memoized WITH the reason they were made (:func:`family_decision`), so a
+surprising plan can always be interrogated.
 """
 
 from __future__ import annotations
@@ -23,24 +33,51 @@ from repro.kernels.common import pad_lanes as _pad_lanes
 WMS_TILE = 1024
 BMS_TILE = 4096
 
-# VMEM budget for the heuristic (f32 working set of the fused postscan:
-# one-hot (T·m̄) + tril/permutation (T·T) + two reorder operands).
+# VMEM budget for the heuristic (working set of the fused postscan).
 _VMEM_BUDGET_BYTES = 8 << 20
 _MIN_TILE = 256
 
+# Kernel families (DESIGN.md §12). The family heuristic switches to packed
+# counters once the bucket axis is wide enough that the dense one-hot
+# dominates the tile working set.
+FAMILIES = ("onehot", "packed")
+PACKED_MIN_BUCKETS = 64
+
 _TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
+# (n, m_eff, method, backend) -> (family, reason). Reasons are recorded so
+# autotune/heuristic choices stay explainable after the fact.
+_FAMILY_CACHE: Dict[Tuple[int, int, str, str], Tuple[str, str]] = {}
 
 
-def _heuristic_tile(n: int, m: int, method: str, backend: str) -> int:
+def _family_cost_bytes(t: int, m: int, family: str) -> int:
+    """Per-tile working set of the fused postscan kernel, in bytes.
+
+    onehot: one-hot + its cumsum (2·T·m̄ f32) + the triangular-scan and
+    permutation matrices (2·T² f32) + ~8 T-vectors. The pre-PR-5 model
+    under-counted this (it charged one T·m̄ plane and no cumsum output),
+    which is why large-m tiles blew past the budget in practice.
+
+    packed: the (T, ⌈m/k⌉) packed contribution + inclusive-scan planes, the
+    small S×m level-2 scan, and ~8 T-vectors — near-flat in m.
+    """
+    if family == "packed":
+        from repro.kernels.common import packed_layout
+
+        lay = packed_layout(t, m)
+        return 4 * (2 * t * lay.w + 3 * lay.n_sub * m + 8 * t)
+    m_pad = _pad_lanes(m)
+    return 4 * (2 * t * m_pad + 2 * t * t + 8 * t)
+
+
+def _heuristic_tile(
+    n: int, m: int, method: str, backend: str, family: str = "onehot"
+) -> int:
     from repro.core.pipeline.registry import get_backend
 
     base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
     tile = base
     if get_backend(backend).uses_kernels:
-        m_pad = _pad_lanes(m)
-        # fused postscan working set, f32 words
-        cost = lambda t: 4 * (3 * t * m_pad + t * t)
-        while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
+        while tile > _MIN_TILE and _family_cost_bytes(tile, m, family) > _VMEM_BUDGET_BYTES:
             tile //= 2
     if n < tile:
         # tiny input: one tile, padded to the next power of two (>= 128 lanes)
@@ -48,8 +85,78 @@ def _heuristic_tile(n: int, m: int, method: str, backend: str) -> int:
     return tile
 
 
+def _heuristic_family(n: int, m: int, method: str, backend: str) -> Tuple[str, str]:
+    from repro.core.pipeline.registry import get_backend
+
+    be = get_backend(backend)
+    if not be.tiled:
+        return "onehot", "untiled direct-solve backend: no tile local solve"
+    if "packed" not in be.families:
+        return "onehot", f"backend {backend!r} advertises no packed support"
+    if m >= PACKED_MIN_BUCKETS:
+        return "packed", (
+            f"m_eff={m} >= {PACKED_MIN_BUCKETS}: packed subword counters keep "
+            f"the local solve ~flat in the bucket count (DESIGN.md §12)"
+        )
+    return "onehot", (
+        f"m_eff={m} < {PACKED_MIN_BUCKETS}: the dense one-hot local solve is "
+        f"cheaper at narrow bucket axes"
+    )
+
+
+def resolve_kernel_family(
+    n: int, m: int, method: str, backend: str, requested: Optional[str] = None
+) -> str:
+    """Kernel family for one subproblem shape; cached per shape WITH the
+    reason it was chosen (:func:`family_decision`), overridable.
+
+    An explicit ``requested`` family is validated against the backend's
+    ``families`` capability and returned verbatim — and, like an explicit
+    tile, deliberately NEVER cached: a one-off override must not change
+    what later same-shape plans resolve to."""
+    from repro.core.pipeline.registry import get_backend
+
+    be = get_backend(backend)
+    if requested is not None:
+        if requested not in FAMILIES:
+            raise ValueError(
+                f"unknown kernel family {requested!r}; expected one of {FAMILIES}"
+            )
+        if be.tiled and requested not in be.families:
+            raise ValueError(
+                f"backend {backend!r} supports kernel families {be.families}, "
+                f"not {requested!r}"
+            )
+        return requested
+    key = (n, m, method, backend)
+    hit = _FAMILY_CACHE.get(key)
+    if hit is None:
+        hit = _heuristic_family(n, m, method, backend)
+        _FAMILY_CACHE[key] = hit
+    return hit[0]
+
+
+def family_decision(n: int, m: int, method: str, backend: str) -> Tuple[str, str]:
+    """(family, reason) for one shape — resolving (and memoizing) it first
+    if needed. The reason says whether the heuristic or the autotuner chose,
+    and why."""
+    resolve_kernel_family(n, m, method, backend)
+    return _FAMILY_CACHE[(n, m, method, backend)]
+
+
+def family_decisions() -> Dict[Tuple[int, int, str, str], Tuple[str, str]]:
+    """Snapshot of every (shape -> (family, reason)) decision so far."""
+    return dict(_FAMILY_CACHE)
+
+
 def resolve_tile(
-    n: int, m: int, method: str, key_value: bool, backend: str, requested: Optional[int] = None
+    n: int,
+    m: int,
+    method: str,
+    key_value: bool,
+    backend: str,
+    requested: Optional[int] = None,
+    family: Optional[str] = None,
 ) -> int:
     """Tile height for one subproblem; cached per shape, overridable.
 
@@ -57,23 +164,32 @@ def resolve_tile(
     key_value, backend)``, with ``m_eff`` derived from the (hashable)
     bucket spec — never a spec/identifier object id, so equal spec
     instances share one entry and the cache cannot grow per instance
-    (regression-tested).
+    (regression-tested).  The kernel family the shape auto-resolves to is a
+    deterministic function of the same key, so it needs no extra key slot;
+    a plan resolved with an EXPLICIT off-heuristic family computes its tile
+    under that family's cost model without touching the cache.
 
     An explicit ``requested`` tile is returned verbatim and deliberately
     NEVER written into the cache: a one-off override must not change what
     later same-shape calls resolve to (regression-tested)."""
     if requested is not None:
         return requested
+    auto_family = resolve_kernel_family(n, m, method, backend)
+    fam = auto_family if family is None else family
+    if fam != auto_family:
+        return _heuristic_tile(n, m, method, backend, family=fam)
     key = (n, m, method, key_value, backend)
     tile = _TILE_CACHE.get(key)
     if tile is None:
-        tile = _heuristic_tile(n, m, method, backend)
+        tile = _heuristic_tile(n, m, method, backend, family=fam)
         _TILE_CACHE[key] = tile
     return tile
 
 
 def clear_tile_cache() -> None:
+    """Drop every memoized tile AND family decision."""
     _TILE_CACHE.clear()
+    _FAMILY_CACHE.clear()
 
 
 def autotune_tile(
@@ -84,41 +200,64 @@ def autotune_tile(
     key_value: bool = False,
     backend: str = "vmap",
     candidates: Tuple[int, ...] = (256, 512, 1024, 2048, 4096),
+    families: Optional[Tuple[str, ...]] = None,
     trials: int = 3,
     seed: int = 0,
 ) -> int:
-    """Time the candidate tile sizes on synthetic uniform keys and pin the
-    winner in the per-shape cache. Returns the chosen tile."""
+    """Time the candidate (tile, family) grid on synthetic uniform keys and
+    pin BOTH winners in the per-shape caches (the family with an
+    ``autotuned`` reason naming the measured best). Returns the chosen
+    tile; read the family via :func:`family_decision`."""
     import numpy as np
 
+    from repro.core.pipeline.registry import get_backend
     from repro.core.pipeline.spec import make_plan
+
+    be = get_backend(backend)
+    if families is None:
+        families = be.families if be.tiled else ("onehot",)
+    for fam in families:
+        resolve_kernel_family(n, bucket_fn.num_buckets, method, backend, fam)
 
     rng = np.random.RandomState(seed)
     keys = jnp.asarray(rng.randint(0, 2**30, n, dtype=np.uint32))
     values = jnp.arange(n, dtype=jnp.int32) if key_value else None
-    best, best_t = None, None
+    best, best_t, best_f = None, None, None
     for tile in candidates:
         if tile > max(n, _MIN_TILE):
             continue
-        plan = make_plan(
-            n, bucket_fn.num_buckets, method=method, key_value=key_value,
-            backend=backend, tile=tile, bucket_fn=bucket_fn,
-        )
-        run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
-            lambda k: plan(k).keys
-        )
-        args = (keys, values) if key_value else (keys,)
-        jax.block_until_ready(run(*args))                    # compile
-        ts = []
-        for _ in range(trials):
-            t0 = time.perf_counter()
-            jax.block_until_ready(run(*args))
-            ts.append(time.perf_counter() - t0)
-        t = min(ts)
-        if best is None or t < best:
-            best, best_t = t, tile
+        for fam in families:
+            plan = make_plan(
+                n, bucket_fn.num_buckets, method=method, key_value=key_value,
+                backend=backend, tile=tile, bucket_fn=bucket_fn, family=fam,
+            )
+            run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
+                lambda k: plan(k).keys
+            )
+            args = (keys, values) if key_value else (keys,)
+            jax.block_until_ready(run(*args))                # compile
+            ts = []
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(*args))
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+            if best is None or t < best:
+                best, best_t, best_f = t, tile, fam
     if best_t is not None:
         _TILE_CACHE[(n, bucket_fn.num_buckets, method, key_value, backend)] = best_t
+        # The family decision is shared by both key-value variants of the
+        # shape, but only THIS variant's tile was measured under the new
+        # family — drop the other variant's entry so it re-resolves under
+        # the pinned family's cost model instead of keeping a tile sized
+        # for the old one (regression-tested).
+        _TILE_CACHE.pop(
+            (n, bucket_fn.num_buckets, method, not key_value, backend), None
+        )
+        _FAMILY_CACHE[(n, bucket_fn.num_buckets, method, backend)] = (best_f, (
+            f"autotuned over tiles={candidates} x families={tuple(families)}: "
+            f"({best_t}, {best_f!r}) won at {best:.3e}s"
+        ))
     return best_t if best_t is not None else resolve_tile(
         n, bucket_fn.num_buckets, method, key_value, backend
     )

@@ -55,24 +55,30 @@ from repro.core.pipeline.stages import exclusive_rows as _exclusive_rows
 from repro.core.pipeline.stages import seg_tile_local as _seg_tile_local
 from repro.core.pipeline.stages import tile_local_offsets as _tile_local_offsets
 from repro.core.pipeline.tiles import (
+    _FAMILY_CACHE,
     _MIN_TILE,
     _TILE_CACHE,
     _VMEM_BUDGET_BYTES,
     BMS_TILE,
+    FAMILIES,
     WMS_TILE,
     _heuristic_tile,
     autotune_tile,
     clear_tile_cache,
+    family_decision,
+    family_decisions,
+    resolve_kernel_family,
     resolve_tile,
 )
 
 __all__ = [
-    "BACKENDS", "BMS_TILE", "MODES", "MultisplitPlan", "MultisplitResult",
-    "PipelineSpec", "RadixPipeline", "Stage", "WMS_TILE", "autotune_tile",
-    "available_backends", "backend_names", "clear_tile_cache",
-    "direct_counts", "exclusive_rows", "get_backend", "global_scan",
-    "make_batched_plan", "make_plan", "make_radix_plan",
-    "make_segmented_plan", "make_segmented_radix_plan", "pad_rows",
-    "pad_to_tiles", "radix_passes", "register_backend", "resolve_backend",
+    "BACKENDS", "BMS_TILE", "FAMILIES", "MODES", "MultisplitPlan",
+    "MultisplitResult", "PipelineSpec", "RadixPipeline", "Stage", "WMS_TILE",
+    "autotune_tile", "available_backends", "backend_names",
+    "clear_tile_cache", "direct_counts", "exclusive_rows", "family_decision",
+    "family_decisions", "get_backend", "global_scan", "make_batched_plan",
+    "make_plan", "make_radix_plan", "make_segmented_plan",
+    "make_segmented_radix_plan", "pad_rows", "pad_to_tiles", "radix_passes",
+    "register_backend", "resolve_backend", "resolve_kernel_family",
     "resolve_tile", "segment_ids_from_starts", "tile_local_offsets",
 ]

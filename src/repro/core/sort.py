@@ -50,6 +50,7 @@ def radix_sort(
     interpret: bool = True,
     backend: Optional[str] = None,
     tile: Optional[int] = None,
+    family: Optional[str] = None,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort uint32 keys with ⌈key_bits/radix_bits⌉ multisplit passes (§7.1).
 
@@ -83,6 +84,7 @@ def radix_sort(
         backend=resolved,
         tile=tile,
         batch=batch,
+        family=family,
     )
     return pipe(keys, values)
 
@@ -99,6 +101,7 @@ def segmented_radix_sort(
     interpret: bool = True,
     backend: Optional[str] = None,
     tile: Optional[int] = None,
+    family: Optional[str] = None,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort every ragged segment of flat uint32 ``keys`` independently, in
     ONE chained sequence of ⌈key_bits/radix_bits⌉ segmented multisplit
@@ -123,6 +126,7 @@ def segmented_radix_sort(
         backend=resolved,
         tile=tile,
         segments=int(seg.shape[0]),
+        family=family,
     )
     return pipe(keys, values, segment_starts=seg)
 

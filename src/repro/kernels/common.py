@@ -1,7 +1,9 @@
 """Shared building blocks for the multisplit Pallas kernels (DESIGN.md §4).
 
-Every kernel in this package is built from the same four VMEM-resident
-primitives, so they live in one module instead of being re-derived per file:
+Every kernel in this package is built from a small set of VMEM-resident
+primitives, so they live in one module instead of being re-derived per file.
+
+The DENSE one-hot family (DESIGN.md §2):
 
 * :func:`one_hot_f32`   — the paper's binary matrix ``H̄`` (§4.5) built with a
   broadcasted iota compare (no gather, VPU-friendly).
@@ -15,9 +17,29 @@ primitives, so they live in one module instead of being re-derived per file:
 
 All integer payloads are carried through fp32 matmuls in exact range
 (< 2^24 per half-word / count), which every kernel test checks bit-exactly.
+
+The PACKED subword-counter family (DESIGN.md §12, paper §4.3): the dense
+family's per-tile work and VMEM scale as ``T × m`` because every element
+materializes a full one-hot row.  The packed family instead privatizes
+``k = 32 / bits`` bucket counters per ``uint32`` word — the vectorized
+analogue of the paper's packed shared-memory counters — and ranks elements
+with a TWO-LEVEL hierarchy: an inclusive scan of packed words inside
+``subtile``-row blocks (counts bounded by ``2^bits − 1``, the overflow
+guard of :func:`packed_layout`), then one small ``S × m`` exclusive scan
+across the blocks.  The scan matrix shrinks from ``T × m`` f32 words to
+``T × ⌈m/k⌉`` uint32 words and the quadratic cumsum matmul disappears, so
+per-key work is ~flat in the bucket count up to m = 256.  Shared entry
+points: :func:`packed_layout`, :func:`packed_local_offsets`,
+:func:`packed_counts`, :func:`packed_positions_body`,
+:func:`packed_postscan_body` — the SAME jnp bodies are traced inside the
+Pallas kernels and vmapped by the jnp emulation backends, which is what
+makes the two families bitwise-comparable oracles of each other.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +106,192 @@ def fused_postscan_body(ids, g_row, keys, vals, m_pad: int):
     keys_r = permute_matmul_32(perm, keys)
     pos_r = permute_matmul_32(perm, gpos)
     vals_r = permute_matmul_32(perm, vals) if vals is not None else None
+    return keys_r, vals_r, pos_r, gpos
+
+
+# ---------------------------------------------------------------------------
+# Packed subword counters (DESIGN.md §12; paper §4.3's privatized packed
+# counters, emulated with shift/mask vector ops).
+# ---------------------------------------------------------------------------
+
+DEFAULT_PACKED_BITS = 8      # counter width: k = 32/bits counters per word
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Resolved packed-counter geometry for one tile shape (hashable, so it
+    rides as a static kernel/jit parameter like a BucketSpec).
+
+    ``bits`` is the subword counter width, ``k = 32 // bits`` the counters
+    per uint32 word, ``w = ceil(m_eff / k)`` the packed words per element
+    row, ``subtile`` the level-1 scan span (counts inside one subtile are
+    bounded by ``subtile`` ≤ ``2^bits − 1``: the no-overflow invariant), and
+    ``n_sub = ceil(tile / subtile)`` the level-2 height."""
+
+    tile: int
+    m_eff: int
+    bits: int
+    k: int
+    w: int
+    subtile: int
+    n_sub: int
+
+    @property
+    def lane_mask(self):
+        return jnp.uint32((1 << self.bits) - 1)
+
+
+def packed_layout(
+    tile: int,
+    m_eff: int,
+    bits: int = DEFAULT_PACKED_BITS,
+    subtile: Optional[int] = None,
+) -> PackedLayout:
+    """Resolve (and GUARD) the packed-counter geometry for one tile.
+
+    Raises ``ValueError`` for any (tile, bits, subtile) combination that
+    could overflow a subword counter — a subtile taller than ``2^bits − 1``
+    rows could put more than ``2^bits − 1`` equal bucket ids into one
+    counter lane (the adversarial all-one-bucket input), silently wrapping
+    it.  The auto subtile is the largest power of two that is provably safe
+    (and ≤ 128, one VPU sublane block)."""
+    if tile < 1:
+        raise ValueError(f"packed layout needs tile >= 1, got {tile}")
+    if m_eff < 1:
+        raise ValueError(f"packed layout needs m_eff >= 1, got {m_eff}")
+    if bits not in (1, 2, 4, 8, 16):
+        raise ValueError(
+            f"bits-per-counter must divide 32 and be <= 16, got {bits}"
+        )
+    cap = (1 << bits) - 1                     # max exact count per lane
+    if subtile is None:
+        subtile = 1
+        while subtile * 2 <= min(tile, cap, 128):
+            subtile *= 2
+    if subtile < 1:
+        raise ValueError(f"subtile must be >= 1, got {subtile}")
+    if subtile > cap:
+        raise ValueError(
+            f"subtile={subtile} overflows {bits}-bit packed counters: a "
+            f"single-bucket subtile reaches count {subtile} > {cap} "
+            f"(= 2^{bits} - 1). Use a shorter subtile or wider counters."
+        )
+    k = 32 // bits
+    return PackedLayout(
+        tile=tile, m_eff=m_eff, bits=bits, k=k, w=-(-m_eff // k),
+        subtile=subtile, n_sub=-(-tile // subtile),
+    )
+
+
+def _packed_pad_ids(ids: Array, layout: PackedLayout) -> Tuple[Array, int]:
+    """Pad the id strip to a whole number of subtiles with bucket m_eff−1
+    (tail pads never change earlier elements' ranks; callers slice/adjust)."""
+    t = ids.shape[0]
+    n_pad = (-t) % layout.subtile
+    if n_pad:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_pad,), layout.m_eff - 1, ids.dtype)]
+        )
+    return ids, n_pad
+
+
+def packed_encode(ids: Array, layout: PackedLayout) -> Array:
+    """(T,) int32 ids -> (T, w) uint32 packed one-hot: element i contributes
+    ``1 << (bits * (id mod k))`` to word ``id div k`` (shift/mask emulation
+    of the paper's per-warp packed counter update)."""
+    t = ids.shape[0]
+    q = (ids // layout.k).astype(jnp.int32)
+    shift = jnp.uint32(layout.bits) * (ids % layout.k).astype(jnp.uint32)
+    unit = jnp.uint32(1) << shift
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, layout.w), 1)
+    return jnp.where(cols == q[:, None], unit[:, None], jnp.uint32(0))
+
+
+def packed_unpack(packed_rows: Array, layout: PackedLayout) -> Array:
+    """(R, w) uint32 packed counters -> (R, m_eff) int32 counts."""
+    shifts = jnp.uint32(layout.bits) * jnp.arange(layout.k, dtype=jnp.uint32)
+    lanes = (packed_rows[:, :, None] >> shifts[None, None, :]) & layout.lane_mask
+    return lanes.reshape(packed_rows.shape[0], layout.w * layout.k)[
+        :, : layout.m_eff
+    ].astype(jnp.int32)
+
+
+def _packed_state(ids: Array, layout: PackedLayout):
+    """The shared two-level solve: (rank_incl, sub_hist, excl_sub).
+
+    ``rank_incl`` is the 1-based stable rank of each element within its
+    (subtile, bucket) cell; ``sub_hist`` the (S, m_eff) per-subtile
+    histograms; ``excl_sub`` their exclusive scan over subtiles (the level-2
+    carry each element adds to reach its within-tile rank)."""
+    ids, _ = _packed_pad_ids(ids, layout)
+    t_pad = ids.shape[0]
+    q = (ids // layout.k).astype(jnp.int32)
+    shift = jnp.uint32(layout.bits) * (ids % layout.k).astype(jnp.uint32)
+    contrib = packed_encode(ids, layout)
+    # level 1: inclusive scan of packed words inside each subtile — counts
+    # stay <= subtile <= 2^bits - 1, so lanes never carry into each other.
+    incl3 = jnp.cumsum(
+        contrib.reshape(layout.n_sub, layout.subtile, layout.w), axis=1
+    )
+    incl = incl3.reshape(t_pad, layout.w)
+    word = jnp.take_along_axis(incl, q[:, None], axis=1)[:, 0]
+    rank_incl = ((word >> shift) & layout.lane_mask).astype(jnp.int32)
+    # level 2: unpack ONLY the S subtile totals and scan those — S*m work
+    # instead of the dense family's T*m.
+    sub_hist = packed_unpack(incl3[:, -1, :], layout)       # (S, m_eff)
+    excl_sub = jnp.cumsum(sub_hist, axis=0) - sub_hist
+    return rank_incl, sub_hist, excl_sub
+
+
+def packed_local_offsets(ids: Array, layout: PackedLayout) -> Tuple[Array, Array]:
+    """Packed-counter analogue of the dense one-hot local solve: (stable
+    0-based in-bucket rank within the tile, tile histogram), bitwise equal
+    to ``tile_local_offsets(ids, m_eff)``."""
+    t = ids.shape[0]
+    rank_incl, sub_hist, excl_sub = _packed_state(ids, layout)
+    sub_idx = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], 1), 0)[:, 0] // layout.subtile
+    local = excl_sub[sub_idx, ids] + rank_incl[:t] - 1
+    hist = sub_hist.sum(axis=0)
+    n_pad = layout.n_sub * layout.subtile - t
+    if n_pad:
+        hist = hist.at[layout.m_eff - 1].add(-n_pad)        # drop internal pads
+    return local.astype(jnp.int32), hist.astype(jnp.int32)
+
+
+def packed_counts(ids: Array, layout: PackedLayout) -> Array:
+    """Histogram-only form: per-subtile packed SUMS (no scan) + one unpack.
+    Bitwise equal to the dense tile histogram."""
+    t = ids.shape[0]
+    ids, n_pad = _packed_pad_ids(ids, layout)
+    contrib = packed_encode(ids, layout)
+    sub_tot = contrib.reshape(layout.n_sub, layout.subtile, layout.w).sum(
+        axis=1, dtype=jnp.uint32
+    )
+    hist = packed_unpack(sub_tot, layout).sum(axis=0)
+    if n_pad:
+        hist = hist.at[layout.m_eff - 1].add(-n_pad)
+    return hist.astype(jnp.int32)
+
+
+def packed_positions_body(ids: Array, g_row: Array, layout: PackedLayout) -> Array:
+    """Packed DMS postscan: global destinations, paper eq. (2)."""
+    local, _ = packed_local_offsets(ids, layout)
+    return (g_row.astype(jnp.int32)[ids] + local).astype(jnp.int32)
+
+
+def packed_postscan_body(ids, g_row, keys, vals, layout: PackedLayout):
+    """THE packed fused postscan+reorder: same contract as
+    :func:`fused_postscan_body` — (keys_r, vals_r_or_None, pos_r, gpos) with
+    the first three bucket-major within the tile — but built on the
+    two-level packed rank and an in-tile scatter instead of the T×m one-hot
+    cumsum and T×T permutation matmuls."""
+    local, hist = packed_local_offsets(ids, layout)
+    starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+    dest = (starts[ids] + local).astype(jnp.int32)          # within-tile destination
+    gpos = (g_row.astype(jnp.int32)[ids] + local).astype(jnp.int32)  # eq. (2)
+    keys_r = jnp.zeros_like(keys).at[dest].set(keys)
+    pos_r = jnp.zeros_like(gpos).at[dest].set(gpos)
+    vals_r = jnp.zeros_like(vals).at[dest].set(vals) if vals is not None else None
     return keys_r, vals_r, pos_r, gpos
 
 

@@ -41,6 +41,15 @@ even, identity, radix bitfield), not just the radix digit. The n-sized
 label array of the pre-PR-4 pipeline never exists for these specs; the
 radix kernels in :mod:`repro.kernels.radix_pass` are now thin
 ``BitfieldSpec`` instantiations of this machinery.
+
+Packed-counter variants (``packed_*``, DESIGN.md §12): the second KERNEL
+FAMILY. Same stage contracts as the dense kernels above, but the local
+solve uses bit-packed subword counters + two-level (subtile -> tile)
+ranking (paper §4.3) instead of the T×m one-hot/cumsum, so per-key work
+and VMEM stay ~flat in the bucket count. One generic kernel per stage
+covers all four dense shapes ({ids | fused-spec labels} × {flat |
+segmented}); family selection is a plan axis resolved by
+:func:`repro.core.pipeline.tiles.resolve_kernel_family`.
 """
 
 from __future__ import annotations
@@ -57,6 +66,10 @@ from repro.kernels.common import (
     exclusive_starts_mxu,
     fused_postscan_body,
     one_hot_f32 as _one_hot,
+    packed_counts,
+    packed_layout,
+    packed_positions_body,
+    packed_postscan_body,
     pad_lanes as _pad_lanes,
     permutation_matrix,
     permute_matmul_32,
@@ -591,6 +604,206 @@ def seg_spec_fused_postscan_reorder_pallas(
         return keys_r, vals_r, pos_r, perm
     keys_r, pos_r, perm = out
     return keys_r, None, pos_r, perm
+
+
+# ---------------------------------------------------------------------------
+# PACKED kernel family (DESIGN.md §12): subword bucket counters packed k per
+# uint32 word + two-level (subtile -> tile) ranking, replacing the T×m
+# one-hot/cumsum of every kernel above. ONE generic kernel per pipeline
+# stage covers all four dense shapes — {ids strip | in-register spec labels}
+# × {flat | segmented} — selected by static flags, so the packed family has
+# exactly three entry points (histograms / positions / fused reorder).
+# ---------------------------------------------------------------------------
+
+def _packed_ids(x, seg_ref, *, spec, m: int):
+    """The combined bucket id strip of one tile, computed in-register:
+    ``spec.emit_in_kernel`` when label-fused, plus the segment high part."""
+    ids = spec.emit_in_kernel(x) if spec is not None else x
+    if seg_ref is not None:
+        ids = ids + seg_ref[0, :] * m
+    return ids
+
+
+def _packed_hist_kernel(*refs, spec, m: int, has_seg: bool, layout):
+    if has_seg:
+        x_ref, seg_ref, hist_ref = refs
+    else:
+        (x_ref, hist_ref), seg_ref = refs, None
+    ids = _packed_ids(x_ref[0, :], seg_ref, spec=spec, m=m)
+    hist_ref[0, :] = packed_counts(ids, layout)
+
+
+def packed_tile_histograms_pallas(
+    tiled: Array,
+    num_buckets: int,
+    *,
+    spec=None,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Array:
+    """Packed prescan: (L, T) ids (or keys when ``spec`` fuses labels)
+    [+ (L, T) segment ids] -> (L, s*m) int32 histograms. Contract of
+    :func:`tile_histograms_pallas` / its seg/spec variants, one entry."""
+    n_tiles, t = tiled.shape
+    m = spec.num_buckets if spec is not None else num_buckets
+    m_eff = m * num_segments
+    layout = packed_layout(t, m_eff, **_layout_kw(bits, subtile))
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    has_seg = seg_tiled is not None
+    return pl.pallas_call(
+        functools.partial(
+            _packed_hist_kernel, spec=spec, m=m, has_seg=has_seg, layout=layout
+        ),
+        grid=(n_tiles,),
+        in_specs=[row] * (2 if has_seg else 1),
+        out_specs=pl.BlockSpec((1, m_eff), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_eff), jnp.int32),
+        interpret=interpret,
+    )(*((tiled, seg_tiled) if has_seg else (tiled,)))
+
+
+def _packed_positions_kernel(*refs, spec, m: int, has_seg: bool, layout):
+    if has_seg:
+        x_ref, seg_ref, g_ref, pos_ref = refs
+    else:
+        (x_ref, g_ref, pos_ref), seg_ref = refs, None
+    ids = _packed_ids(x_ref[0, :], seg_ref, spec=spec, m=m)
+    pos_ref[0, :] = packed_positions_body(ids, g_ref[0, :], layout)
+
+
+def packed_tile_positions_pallas(
+    tiled: Array,
+    g: Array,
+    num_buckets: int,
+    *,
+    spec=None,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Array:
+    """Packed DMS postscan: (L, T) ids/keys + (L, s*m) bases -> (L, T)
+    destinations (paper eq. (2)); two-level packed rank, no one-hot."""
+    n_tiles, t = tiled.shape
+    m = spec.num_buckets if spec is not None else num_buckets
+    m_eff = m * num_segments
+    layout = packed_layout(t, m_eff, **_layout_kw(bits, subtile))
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    grow = pl.BlockSpec((1, m_eff), lambda i: (i, 0))
+    has_seg = seg_tiled is not None
+    in_specs = [row, row, grow] if has_seg else [row, grow]
+    args = (tiled, seg_tiled, g) if has_seg else (tiled, g)
+    return pl.pallas_call(
+        functools.partial(
+            _packed_positions_kernel, spec=spec, m=m, has_seg=has_seg, layout=layout
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(*args)
+
+
+def _packed_fused_kernel(
+    *refs, spec, m: int, has_seg: bool, has_keys: bool, has_values: bool, layout
+):
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    seg_ref = refs.pop(0) if has_seg else None
+    g_ref = refs.pop(0)
+    keys_ref = refs.pop(0) if has_keys else x_ref
+    vals_ref = refs.pop(0) if has_values else None
+    if has_values:
+        keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref = refs
+    else:
+        (keys_out_ref, pos_out_ref, perm_out_ref), vals_out_ref = refs, None
+
+    ids = _packed_ids(x_ref[0, :], seg_ref, spec=spec, m=m)
+    keys_r, vals_r, pos_r, gpos = packed_postscan_body(
+        ids, g_ref[0, :], keys_ref[0, :],
+        vals_ref[0, :] if has_values else None, layout,
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos                               # element-ordered perm
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def packed_fused_postscan_reorder_pallas(
+    tiled: Array,
+    g: Array,
+    keys_tiled: Optional[Array] = None,
+    values_tiled: Optional[Array] = None,
+    *,
+    spec=None,
+    num_buckets: Optional[int] = None,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Packed WMS/BMS postscan+reorder: the output contract of
+    :func:`fused_postscan_reorder_pallas` (and its seg/spec variants) from
+    ONE two-level packed-rank evaluation per tile.
+
+    ``tiled`` is the id strip (with ``keys_tiled`` alongside) or, when
+    ``spec`` is given, the key strip itself (labels in-register; no separate
+    keys input)."""
+    n_tiles, t = tiled.shape
+    m = spec.num_buckets if spec is not None else num_buckets
+    m_eff = m * num_segments
+    layout = packed_layout(t, m_eff, **_layout_kw(bits, subtile))
+    has_seg = seg_tiled is not None
+    has_keys = keys_tiled is not None
+    has_values = values_tiled is not None
+    key_src = keys_tiled if has_keys else tiled
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    grow = pl.BlockSpec((1, m_eff), lambda i: (i, 0))
+    in_specs = [row] + ([row] if has_seg else []) + [grow] + (
+        [row] if has_keys else []) + ([row] if has_values else [])
+    args = ((tiled,) + ((seg_tiled,) if has_seg else ()) + (g,)
+            + ((keys_tiled,) if has_keys else ())
+            + ((values_tiled,) if has_values else ()))
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), key_src.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    out = pl.pallas_call(
+        functools.partial(
+            _packed_fused_kernel, spec=spec, m=m, has_seg=has_seg,
+            has_keys=has_keys, has_values=has_values, layout=layout,
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+def _layout_kw(bits: Optional[int], subtile: Optional[int]) -> dict:
+    kw = {}
+    if bits is not None:
+        kw["bits"] = bits
+    if subtile is not None:
+        kw["subtile"] = subtile
+    return kw
 
 
 # ---------------------------------------------------------------------------

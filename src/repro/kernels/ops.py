@@ -142,6 +142,79 @@ def seg_spec_fused_postscan_reorder(
     )
 
 
+# -- packed-counter family entry points (DESIGN.md §12): ONE wrapper per
+# pipeline stage covers {ids strip | fused spec labels} × {flat | segmented}.
+# ``spec``/counts/segments/layout knobs are static; equal hashable specs and
+# layouts share one trace, exactly like the dense spec wrappers above.
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_buckets", "spec", "num_segments", "bits", "subtile", "interpret"))
+def packed_tile_histograms(
+    tiled: Array,
+    seg_tiled: Optional[Array] = None,
+    *,
+    num_buckets: Optional[int] = None,
+    spec=None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Array:
+    """THE packed prescan entry point (see multisplit_tile)."""
+    return _mst.packed_tile_histograms_pallas(
+        tiled, num_buckets if spec is None else spec.num_buckets, spec=spec,
+        seg_tiled=seg_tiled, num_segments=num_segments, bits=bits,
+        subtile=subtile, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_buckets", "spec", "num_segments", "bits", "subtile", "interpret"))
+def packed_tile_positions(
+    tiled: Array,
+    g: Array,
+    seg_tiled: Optional[Array] = None,
+    *,
+    num_buckets: Optional[int] = None,
+    spec=None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Array:
+    """THE packed DMS postscan entry point (see multisplit_tile)."""
+    return _mst.packed_tile_positions_pallas(
+        tiled, g, num_buckets if spec is None else spec.num_buckets,
+        spec=spec, seg_tiled=seg_tiled, num_segments=num_segments, bits=bits,
+        subtile=subtile, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_buckets", "spec", "num_segments", "bits", "subtile", "interpret"))
+def packed_fused_postscan_reorder(
+    tiled: Array,
+    g: Array,
+    keys_tiled: Optional[Array] = None,
+    values_tiled: Optional[Array] = None,
+    seg_tiled: Optional[Array] = None,
+    *,
+    num_buckets: Optional[int] = None,
+    spec=None,
+    num_segments: int = 1,
+    bits: Optional[int] = None,
+    subtile: Optional[int] = None,
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE packed WMS/BMS postscan+reorder entry point (see multisplit_tile)."""
+    return _mst.packed_fused_postscan_reorder_pallas(
+        tiled, g, keys_tiled, values_tiled, spec=spec,
+        num_buckets=num_buckets, seg_tiled=seg_tiled,
+        num_segments=num_segments, bits=bits, subtile=subtile,
+        interpret=interpret,
+    )
+
+
 # -- segmented entry points (DESIGN.md §9): segment id rides in-kernel ------
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))

@@ -96,12 +96,12 @@ def _broadcast_unbatched(x: Array, batched: bool, axis_size: int) -> Array:
 
 
 def _build_flat_op(spec: BucketSpec, n: int, method: str, backend: str,
-                   tile: Optional[int], mode: str):
+                   tile: Optional[int], mode: str, family: Optional[str]):
     """The key-only op for one (spec, n, config): a custom_vmap-wrapped flat
     plan whose vmap rule IS the batched plan (one launch, DESIGN.md §9)."""
     plan = make_plan(
         n, spec.num_buckets, method=method, backend=backend, tile=tile,
-        bucket_fn=spec, mode=mode,
+        bucket_fn=spec, mode=mode, family=family,
     )
 
     @custom_batching.custom_vmap
@@ -113,7 +113,7 @@ def _build_flat_op(spec: BucketSpec, n: int, method: str, backend: str,
         keys = _broadcast_unbatched(keys, in_batched[0], axis_size)
         bplan = make_batched_plan(
             axis_size, n, spec.num_buckets, method=method, backend=backend,
-            tile=tile, bucket_fn=spec, mode=mode,
+            tile=tile, bucket_fn=spec, mode=mode, family=family,
         )
         res = bplan(keys)
         return res, _out_batched(res)
@@ -129,10 +129,10 @@ def _build_flat_op(spec: BucketSpec, n: int, method: str, backend: str,
 _flat_op_cached = functools.lru_cache(maxsize=512)(_build_flat_op)
 
 
-def _flat_op(spec, n, method, backend, tile, mode):
+def _flat_op(spec, n, method, backend, tile, mode, family):
     if isinstance(spec, CallableSpec):
-        return _build_flat_op(spec, n, method, backend, tile, mode)
-    return _flat_op_cached(spec, n, method, backend, tile, mode)
+        return _build_flat_op(spec, n, method, backend, tile, mode, family)
+    return _flat_op_cached(spec, n, method, backend, tile, mode, family)
 
 
 def _ct_gather(ct_leaf, perm):
@@ -145,13 +145,13 @@ def _ct_gather(ct_leaf, perm):
 
 
 def _build_kv_op(spec: BucketSpec, n: int, method: str, backend: str,
-                 tile: Optional[int]):
+                 tile: Optional[int], family: Optional[str]):
     """The key-value op: custom_vjp (backward = inverse gather of the
     forward permutation) over a custom_vmap inner (batched-plan vmap rule),
     so grad, vmap, and vmap-of-grad all hit the intended paths."""
     plan = make_plan(
         n, spec.num_buckets, method=method, key_value=True, backend=backend,
-        tile=tile, bucket_fn=spec,
+        tile=tile, bucket_fn=spec, family=family,
     )
 
     @custom_batching.custom_vmap
@@ -164,7 +164,7 @@ def _build_kv_op(spec: BucketSpec, n: int, method: str, backend: str,
         values = _broadcast_unbatched(values, in_batched[1], axis_size)
         bplan = make_batched_plan(
             axis_size, n, spec.num_buckets, method=method, key_value=True,
-            backend=backend, tile=tile, bucket_fn=spec,
+            backend=backend, tile=tile, bucket_fn=spec, family=family,
         )
         res = bplan(keys, values)
         return res, _out_batched(res)
@@ -191,10 +191,10 @@ def _build_kv_op(spec: BucketSpec, n: int, method: str, backend: str,
 _kv_op_cached = functools.lru_cache(maxsize=512)(_build_kv_op)
 
 
-def _kv_op(spec, n, method, backend, tile):
+def _kv_op(spec, n, method, backend, tile, family):
     if isinstance(spec, CallableSpec):               # see _flat_op
-        return _build_kv_op(spec, n, method, backend, tile)
-    return _kv_op_cached(spec, n, method, backend, tile)
+        return _build_kv_op(spec, n, method, backend, tile, family)
+    return _kv_op_cached(spec, n, method, backend, tile, family)
 
 
 def _check_flat(keys: Array, what: str) -> None:
@@ -214,6 +214,7 @@ def multisplit(
     backend: str = "vmap",
     tile: Optional[int] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Stable multisplit of ``keys`` (and optional ``values``) into the
     buckets of a declarative ``spec`` (paper §3.1).
@@ -223,7 +224,8 @@ def multisplit(
     ``values`` the op is differentiable (see :func:`multisplit_key_value`);
     equal specs share one trace under ``jit``.  ``mode`` selects a partial
     pipeline (``counts_only`` / ``positions_only``, key-only — DESIGN.md
-    §10).
+    §10); ``family`` pins the kernel family (``"onehot"``/``"packed"``,
+    DESIGN.md §12 — bitwise identical, cost only; ``None`` auto-resolves).
     """
     spec = as_spec(spec)
     _check_flat(keys, "ops.multisplit")
@@ -231,9 +233,10 @@ def multisplit(
         if mode != "reorder":
             raise ValueError(f"mode={mode!r} never touches values")
         return multisplit_key_value(
-            keys, values, spec, method=method, backend=backend, tile=tile
+            keys, values, spec, method=method, backend=backend, tile=tile,
+            family=family,
         )
-    return _flat_op(spec, keys.shape[0], method, backend, tile, mode)(keys)
+    return _flat_op(spec, keys.shape[0], method, backend, tile, mode, family)(keys)
 
 
 def multisplit_key_value(
@@ -244,6 +247,7 @@ def multisplit_key_value(
     method: str = "bms",
     backend: str = "vmap",
     tile: Optional[int] = None,
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Key-value multisplit, differentiable in ``values`` (and in ``keys``
     when they are inexact): the backward pass is the INVERSE GATHER of the
@@ -255,7 +259,7 @@ def multisplit_key_value(
     """
     spec = as_spec(spec)
     _check_flat(keys, "ops.multisplit_key_value")
-    return _kv_op(spec, keys.shape[0], method, backend, tile)(keys, values)
+    return _kv_op(spec, keys.shape[0], method, backend, tile, family)(keys, values)
 
 
 def segmented_multisplit(
@@ -268,6 +272,7 @@ def segmented_multisplit(
     backend: str = "vmap",
     tile: Optional[int] = None,
     mode: str = "reorder",
+    family: Optional[str] = None,
 ) -> MultisplitResult:
     """Multisplit every ragged segment of flat ``keys`` independently in ONE
     plan launch (DESIGN.md §9): ``segment_starts`` is the (s,) ascending
@@ -282,7 +287,7 @@ def segmented_multisplit(
     plan = make_segmented_plan(
         keys.shape[0], int(seg.shape[0]), spec.num_buckets, method=method,
         key_value=values is not None, backend=backend, tile=tile,
-        bucket_fn=spec, mode=mode,
+        bucket_fn=spec, mode=mode, family=family,
     )
     return plan(keys, values, segment_starts=seg)
 
@@ -293,11 +298,13 @@ def histogram(
     *,
     backend: str = "vmap",
     tile: Optional[int] = None,
+    family: Optional[str] = None,
 ) -> Array:
     """Device-wide bucket counts (paper §7.3): the ``counts_only`` partial
     pipeline — {prescan, tree-reduce}, no scan, no scatter."""
     spec = as_spec(spec)
     _check_flat(keys, "ops.histogram")
     return multisplit(
-        keys, spec, backend=backend, tile=tile, mode="counts_only"
+        keys, spec, backend=backend, tile=tile, mode="counts_only",
+        family=family,
     ).bucket_counts

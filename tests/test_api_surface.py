@@ -20,26 +20,30 @@ EXPECTED_ALL = (
 )
 
 EXPECTED_SIGNATURES = {
+    # PR-5 additively appended keyword-only ``family`` (kernel family,
+    # DESIGN.md §12) to every plan-backed op, per the §11 stability policy.
     "multisplit": (
         "(keys, spec, values=None, *, method='bms', backend='vmap', "
-        "tile=None, mode='reorder')"
+        "tile=None, mode='reorder', family=None)"
     ),
     "multisplit_key_value": (
-        "(keys, values, spec, *, method='bms', backend='vmap', tile=None)"
+        "(keys, values, spec, *, method='bms', backend='vmap', tile=None, "
+        "family=None)"
     ),
     "segmented_multisplit": (
         "(keys, spec, segment_starts, values=None, *, method='bms', "
-        "backend='vmap', tile=None, mode='reorder')"
+        "backend='vmap', tile=None, mode='reorder', family=None)"
     ),
-    "histogram": "(keys, spec, *, backend='vmap', tile=None)",
+    "histogram": "(keys, spec, *, backend='vmap', tile=None, family=None)",
     "radix_sort": (
         "(keys, values=None, *, radix_bits=8, key_bits=32, method='bms', "
-        "use_pallas=False, interpret=True, backend=None, tile=None)"
+        "use_pallas=False, interpret=True, backend=None, tile=None, "
+        "family=None)"
     ),
     "segmented_radix_sort": (
         "(keys, segment_starts, values=None, *, radix_bits=8, key_bits=32, "
         "method='bms', use_pallas=False, interpret=True, backend=None, "
-        "tile=None)"
+        "tile=None, family=None)"
     ),
     "delta_buckets": "(num_buckets, key_max=1073741824)",
     "identity_buckets": "(num_buckets)",

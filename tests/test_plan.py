@@ -34,11 +34,18 @@ def test_make_plan_resolves_tile_and_caches():
 
 
 def test_tile_heuristic_respects_vmem_budget_on_pallas():
-    # large m on a pallas backend must shrink the tile below the BMS default
-    p = msplan.make_plan(1 << 20, 256, method="bms", backend="pallas")
+    # large m on a pallas backend must shrink the ONE-HOT-family tile below
+    # the BMS default; the corrected PR-5 cost model charges both T×m̄
+    # planes (one-hot + cumsum) and both T×T matrices (tril + permutation)
+    msplan.clear_tile_cache()
+    p = msplan.make_plan(1 << 20, 256, method="bms", backend="pallas", family="onehot")
     m_pad = 256
-    assert 4 * (3 * p.tile * m_pad + p.tile * p.tile) <= msplan._VMEM_BUDGET_BYTES
-    assert p.tile >= msplan._MIN_TILE
+    t = p.tile
+    assert 4 * (2 * t * m_pad + 2 * t * t + 8 * t) <= msplan._VMEM_BUDGET_BYTES
+    assert t >= msplan._MIN_TILE
+    # the packed family's near-flat-in-m working set keeps the full BMS tile
+    pk = msplan.make_plan(1 << 20, 256, method="bms", backend="pallas", family="packed")
+    assert pk.tile > p.tile
 
 
 def test_small_input_gets_small_tile():
@@ -75,9 +82,17 @@ def test_stages_description():
     )
     assert cb.stages()[0] == "prescan:kernel"
     assert cb.stages()[-2] == "postscan:fused-reorder-kernel"
-    rx = msplan.make_radix_plan(1024, 0, 8, method="bms", backend="pallas-interpret")
+    rx = msplan.make_radix_plan(
+        1024, 0, 8, method="bms", backend="pallas-interpret", family="onehot"
+    )
     assert rx.stages()[0] == "prescan:radix-fused-kernel"
     assert rx.stages()[-2] == "postscan:radix-fused-reorder-kernel"
+    # the 256-bucket digit auto-resolves to the packed family (PR-5), which
+    # tags the local-solve stages
+    rx_auto = msplan.make_radix_plan(1024, 0, 8, method="bms", backend="pallas-interpret")
+    assert rx_auto.family == "packed"
+    assert rx_auto.stages()[0] == "prescan:radix-fused-kernel-packed"
+    assert rx_auto.stages()[-2] == "postscan:radix-fused-reorder-kernel-packed"
 
 
 # ---------------------------------------------------------------------------

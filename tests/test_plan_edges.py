@@ -243,8 +243,8 @@ def test_autotuned_tile_survives_override():
 
 
 def test_segmented_tile_cache_keyed_on_combined_width():
-    """Segmented plans budget VMEM for the COMBINED (s*m) one-hot, so their
-    cache entries must not collide with the flat (n, m) shape."""
+    """Segmented plans budget VMEM for the COMBINED (s*m) scan width, so
+    their cache entries must not collide with the flat (n, m) shape."""
     msplan.clear_tile_cache()
     bf = delta_buckets(16)
     flat = msplan.make_plan(1 << 18, 16, backend="pallas-interpret", bucket_fn=bf)
@@ -253,5 +253,16 @@ def test_segmented_tile_cache_keyed_on_combined_width():
     )
     assert (1 << 18, 16, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
     assert (1 << 18, 1024, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
-    # 64x wider scan matrix => strictly smaller tile under the same budget
-    assert seg.tile < flat.tile
+    # the combined width flips the 1024-wide shape into the PACKED family
+    # (PR-5), whose near-flat-in-m working set KEEPS a larger tile than the
+    # narrow flat shape allows the dense one-hot — the pre-PR-5 "wider scan
+    # => strictly smaller tile" rule only survives within one family
+    assert seg.family == "packed" and flat.family == "onehot"
+    assert seg.tile > flat.tile
+    # within the one-hot family the old rule still holds at a width that
+    # pushes the working set past the budget floor
+    seg1h = msplan.make_plan(
+        1 << 18, 16, backend="pallas-interpret", bucket_fn=bf, segments=256,
+        family="onehot",
+    )
+    assert seg1h.tile < flat.tile
