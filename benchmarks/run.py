@@ -15,9 +15,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     ap.add_argument("--section", action="append",
-                    choices=["multisplit", "sort", "histogram", "sssp", "roofline"])
+                    choices=["multisplit", "sort", "histogram", "sssp", "roofline",
+                             "roofline-multisplit"])
     args = ap.parse_args()
-    sections = args.section or ["multisplit", "sort", "histogram", "sssp", "roofline"]
+    sections = args.section or ["multisplit", "sort", "histogram", "sssp",
+                                "roofline", "roofline-multisplit"]
 
     print("name,us_per_call,derived")
     if "multisplit" in sections:
@@ -48,6 +50,10 @@ def main() -> None:
             roofline.main()
         except Exception as e:  # artifacts may not exist yet
             print(f"# roofline table unavailable: {e}", file=sys.stderr)
+    if "roofline-multisplit" in sections:
+        from benchmarks import roofline_multisplit
+
+        roofline_multisplit.main(quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ structure explicit:
 ``repro.core.plan`` remains a compatibility shim re-exporting this package.
 """
 
-from repro.core.pipeline.radix import RadixPipeline, radix_passes
+from repro.core.pipeline.radix import RadixPipeline, radix_pass_pairs, radix_passes
 from repro.core.pipeline.registry import (
     BACKENDS,
     Backend,
@@ -36,9 +36,12 @@ from repro.core.pipeline.registry import (
 )
 from repro.core.pipeline.spec import (
     MODES,
+    VMAP_FUSION_MAX_BUCKETS,
     MultisplitPlan,
     PipelineSpec,
     Stage,
+    fusion_decision,
+    fusion_decisions,
     make_batched_plan,
     make_plan,
     make_radix_plan,
@@ -75,15 +78,17 @@ from repro.core.pipeline.tiles import (
 __all__ = [
     "BACKENDS", "BMS_TILE", "Backend", "FAMILIES", "KernelStages", "MODES",
     "MultisplitPlan", "MultisplitResult", "PipelineSpec", "RadixPipeline",
-    "Stage", "StageImpl", "VmapStages", "WMS_TILE",
+    "Stage", "StageImpl", "VMAP_FUSION_MAX_BUCKETS", "VmapStages", "WMS_TILE",
     "autotune_tile", "available_backends", "backend_names",
     "clear_tile_cache", "direct_counts", "direct_solve_ids",
     "direct_solve_reference", "exclusive_rows", "family_decision",
-    "family_decisions", "get_backend", "global_scan",
+    "family_decisions", "fusion_decision", "fusion_decisions",
+    "get_backend", "global_scan",
     "make_batched_plan", "make_plan", "make_radix_plan",
     "make_segmented_plan", "make_segmented_radix_plan",
     "packed_direct_solve_ids", "packed_tile_local_offsets", "pad_rows",
-    "pad_to_tiles", "radix_passes", "register_backend", "resolve_backend",
+    "pad_to_tiles", "radix_pass_pairs", "radix_passes", "register_backend",
+    "resolve_backend",
     "resolve_kernel_family", "resolve_tile", "seg_tile_local",
     "segment_ids_from_starts", "tile_local_offsets",
 ]

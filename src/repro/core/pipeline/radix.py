@@ -47,6 +47,45 @@ def radix_passes(radix_bits: int, key_bits: int) -> List[Tuple[int, int]]:
     ]
 
 
+# Pair width ceiling for the fused schedule: a pair's combined digit is the
+# scan axis (m = 2^bits), and 16 bits (m = 65536) is where the G matrix and
+# pair histograms stop paying for the saved scatter.
+MAX_PAIR_BITS = 16
+
+
+def radix_pass_pairs(
+    radix_bits: int, key_bits: int, max_pair_bits: int = MAX_PAIR_BITS
+) -> List[Tuple[int, int, Optional[int]]]:
+    """The fused-pair schedule (DESIGN.md §13): adjacent single-digit passes
+    of :func:`radix_passes` greedily merged into ``(shift, bits, split)``
+    entries — ``split`` is the LOW digit's width inside the pair, ``None``
+    marks an unpaired single pass (the trailing odd digit, or a pass whose
+    pair would exceed ``max_pair_bits``).
+
+    By LSD stability, running the pair as ONE stable pass over the combined
+    ``bits``-wide digit is bitwise identical to the two chained passes it
+    replaces; e.g. r=8 over 32-bit keys → ``[(0, 16, 8), (16, 16, 8)]``
+    (two sweeps instead of four), r=7 → two 14-bit pairs + a single 4-bit
+    trailing pass, r=5 → three 10-bit pairs + a single 2-bit pass. Uneven
+    trailing pairs (last digit narrower) fuse too: r=4 over 30-bit keys ends
+    in ``(24, 6, 4)``.
+    """
+    passes = radix_passes(radix_bits, key_bits)
+    out: List[Tuple[int, int, Optional[int]]] = []
+    i = 0
+    while i < len(passes):
+        if i + 1 < len(passes):
+            (s_a, b_a), (_, b_b) = passes[i], passes[i + 1]
+            if b_a + b_b <= max_pair_bits:
+                out.append((s_a, b_a + b_b, b_a))
+                i += 2
+                continue
+        shift, bits = passes[i]
+        out.append((shift, bits, None))
+        i += 1
+    return out
+
+
 class RadixPipeline:
     """A resolved ⌈key_bits/r⌉-pass radix sort over one problem shape.
 
@@ -69,32 +108,72 @@ class RadixPipeline:
         batch: Optional[int] = None,
         segments: Optional[int] = None,
         family: Optional[str] = None,
+        fuse_digits: bool = False,
     ):
         self.n = n
         self.key_value = key_value
         self.backend = backend
         self.batch = batch
         self.segments = segments
+        self.fuse_digits = fuse_digits
         self.passes = radix_passes(radix_bits, key_bits)
-        # ONE (tile, kernel family) for every pass, keyed by the widest
-        # digit (first pass) — narrower final passes reuse them.
-        m_eff = (1 << self.passes[0][1]) * (segments or 1)
-        self.family = resolve_kernel_family(n, m_eff, method, backend, family)
-        self.tile = resolve_tile(
-            n, m_eff, method, key_value, backend, tile, family=self.family
-        )
-        self.plans = tuple(
-            make_radix_plan(
-                n, shift, bits, method=method, key_value=key_value,
-                backend=backend, tile=self.tile, batch=batch, segments=segments,
-                family=self.family,
+        s = segments or 1
+        be = get_backend(backend)
+        fused_stage = be.tiled and be.fuses_digits
+        if fuse_digits and fused_stage:
+            # Fused-pair schedule (DESIGN.md §13): each pair is ONE sweep
+            # over the combined 2r-bit digit, which the tile stage decomposes
+            # into two r-wide solves around an in-VMEM reorder (digit_split).
+            # Backends without the capability (the untiled reference oracle:
+            # no HBM scatter to save, and a pair-wide direct solve would be
+            # O(n·m²)) keep the single-digit schedule — fuse_digits changes
+            # execution cost only, never the result, on every backend.
+            self.schedule = radix_pass_pairs(radix_bits, key_bits)
+            shift0, bits0, split0 = self.schedule[0]
+            m_eff = (1 << bits0) * s
+            stage_m = (1 << (split0 or bits0)) * s
+            self.family = resolve_kernel_family(n, stage_m, method, backend, family)
+            self.tile = resolve_tile(
+                n, m_eff, method, key_value, backend, tile, family=self.family,
+                digits=2, stage_m=stage_m,
             )
-            for shift, bits in self.passes
-        )
+            self.plans = tuple(
+                make_radix_plan(
+                    n, shift, bits, method=method, key_value=key_value,
+                    backend=backend, tile=self.tile, batch=batch,
+                    segments=segments, family=self.family, digit_split=split,
+                )
+                for shift, bits, split in self.schedule
+            )
+        else:
+            self.schedule = [(sh, b, None) for sh, b in self.passes]
+            # ONE (tile, kernel family) for every pass, keyed by the widest
+            # digit (first pass) — narrower final passes reuse them.
+            m_eff = (1 << self.passes[0][1]) * s
+            self.family = resolve_kernel_family(n, m_eff, method, backend, family)
+            self.tile = resolve_tile(
+                n, m_eff, method, key_value, backend, tile, family=self.family
+            )
+            self.plans = tuple(
+                make_radix_plan(
+                    n, shift, bits, method=method, key_value=key_value,
+                    backend=backend, tile=self.tile, batch=batch, segments=segments,
+                    family=self.family,
+                )
+                for shift, bits in self.passes
+            )
 
     @property
     def n_passes(self) -> int:
+        """Logical single-digit passes (⌈key_bits/r⌉) — schedule-invariant;
+        the number of HBM sweeps actually run is :attr:`n_sweeps`."""
         return len(self.passes)
+
+    @property
+    def n_sweeps(self) -> int:
+        """Executed {prescan, scan, postscan, scatter} sweeps: one per
+        schedule entry — under ``fuse_digits`` a pair counts ONCE."""
+        return len(self.plans)
 
     def __call__(
         self,

@@ -69,6 +69,11 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            return kops.fused2_tile_histograms(
+                keys_tiled, seg_tiled, spec=spec.bucket_fn,
+                num_segments=s or 1, interpret=self.interpret,
+            )
         if spec.family == "packed":              # packed-counter family (§12)
             return kops.packed_tile_histograms(
                 keys_tiled if ids_tiled is None else ids_tiled, seg_tiled,
@@ -94,6 +99,12 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            return kops.fused2_tile_positions(
+                keys_tiled, g, seg_tiled, spec=spec.bucket_fn,
+                split=spec.digit_split, num_segments=s or 1,
+                family=spec.family, interpret=self.interpret,
+            )
         if spec.family == "packed":              # packed-counter family (§12)
             return kops.packed_tile_positions(
                 keys_tiled if ids_tiled is None else ids_tiled, g, seg_tiled,
@@ -120,6 +131,12 @@ class KernelStages(StageImpl):
         from repro.kernels import ops as kops
 
         m, s = spec.num_buckets, spec.segments
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            return kops.fused2_fused_postscan_reorder(
+                keys_tiled, g, vals_tiled, seg_tiled, spec=spec.bucket_fn,
+                split=spec.digit_split, num_segments=s or 1,
+                family=spec.family, interpret=self.interpret,
+            )
         if spec.family == "packed":              # packed-counter family (§12)
             fused = ids_tiled is None
             return kops.packed_fused_postscan_reorder(
@@ -175,8 +192,23 @@ class VmapStages(StageImpl):
             return _st.packed_tile_local_offsets(ids, m)
         return _st.tile_local_offsets(ids, m)
 
+    @staticmethod
+    def _fused2_kw(spec):
+        bf = spec.bucket_fn
+        return dict(shift=bf.shift, split=spec.digit_split, bits=bf.bits,
+                    num_segments=spec.segments or 1, family=spec.family)
+
     def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            bf, s = spec.bucket_fn, spec.segments or 1
+            if seg_tiled is not None:
+                return jax.vmap(lambda k, sg: _st.fused2_tile_counts(
+                    k, bf.shift, bf.bits, seg=sg, num_segments=s
+                ))(keys_tiled, seg_tiled)
+            return jax.vmap(lambda k: _st.fused2_tile_counts(
+                k, bf.shift, bf.bits
+            ))(keys_tiled)
         ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
             m_eff = spec.m_eff
@@ -197,6 +229,15 @@ class VmapStages(StageImpl):
 
     def positions(self, spec, g, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            kw = self._fused2_kw(spec)
+            if seg_tiled is not None:
+                return jax.vmap(lambda k, sg, gt: _st.fused2_tile_postscan(
+                    k, gt, None, seg=sg, **kw
+                )[3])(keys_tiled, seg_tiled, g)
+            return jax.vmap(lambda k, gt: _st.fused2_tile_postscan(
+                k, gt, None, **kw
+            )[3])(keys_tiled, g)
         ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
         if seg_tiled is not None:
             m_eff = spec.m_eff
@@ -219,6 +260,29 @@ class VmapStages(StageImpl):
 
     def reorder(self, spec, g, keys_tiled, ids_tiled, vals_tiled, seg_tiled):
         m, m_eff = spec.num_buckets, spec.m_eff
+        if spec.digit_split is not None:         # fused two-digit pair (§13)
+            kw = self._fused2_kw(spec)
+
+            def fused2_tile(k, sg, gt, vt):
+                keys_r, vals_r, pos_r, perm = _st.fused2_tile_postscan(
+                    k, gt, vt, seg=sg, **kw
+                )
+                if vt is None:
+                    return keys_r, pos_r, perm
+                return keys_r, vals_r, pos_r, perm
+
+            if vals_tiled is None:
+                keys_r, pos_r, perm = jax.vmap(
+                    lambda k, gt: fused2_tile(k, None, gt, None)
+                )(keys_tiled, g) if seg_tiled is None else jax.vmap(
+                    lambda k, sg, gt: fused2_tile(k, sg, gt, None)
+                )(keys_tiled, seg_tiled, g)
+                return keys_r, None, pos_r, perm
+            if seg_tiled is None:
+                return jax.vmap(
+                    lambda k, gt, vt: fused2_tile(k, None, gt, vt)
+                )(keys_tiled, g, vals_tiled)
+            return jax.vmap(fused2_tile)(keys_tiled, seg_tiled, g, vals_tiled)
         ids_tiled = self._tile_ids(spec, keys_tiled, ids_tiled)
 
         def fused_tile(ids, segs, g_tile, keys_t, vals_t):
@@ -273,7 +337,10 @@ class Backend:
     :class:`~repro.core.identifiers.BucketSpec` is evaluated inside the
     backend's tile stage and never materialized as a plan-layer label array.
     ``fuses_radix`` is the pre-PR-4 kernel-only flag (in-KERNEL digit
-    extraction), kept for introspection compat; ``key_itemsize`` restricts
+    extraction), kept for introspection compat; ``fuses_digits`` advertises
+    the fused TWO-digit radix stage (DESIGN.md §13: both digit solves and
+    the intermediate reorder happen per tile residency, dispatched when the
+    plan carries a ``digit_split``); ``key_itemsize`` restricts
     key width (pallas kernels are 32-bit-lane programs). ``families`` lists
     the kernel families (DESIGN.md §12) the backend's stages implement;
     :func:`~repro.core.pipeline.tiles.resolve_kernel_family` validates
@@ -287,6 +354,7 @@ class Backend:
     uses_kernels: bool = False
     fuses_radix: bool = False
     fuses_labels: bool = False
+    fuses_digits: bool = False
     key_itemsize: Optional[int] = None
     families: Tuple[str, ...] = ("onehot",)
 
@@ -336,6 +404,7 @@ register_backend(Backend(
     description="tiled jnp stages, fused per-tile closure",
     stages=VmapStages(),
     fuses_labels=True,
+    fuses_digits=True,
     families=("onehot", "packed"),
 ))
 register_backend(Backend(
@@ -345,6 +414,7 @@ register_backend(Backend(
     uses_kernels=True,
     fuses_radix=True,
     fuses_labels=True,
+    fuses_digits=True,
     key_itemsize=4,
     families=("onehot", "packed"),
 ))
@@ -355,6 +425,7 @@ register_backend(Backend(
     uses_kernels=True,
     fuses_radix=True,
     fuses_labels=True,
+    fuses_digits=True,
     key_itemsize=4,
     families=("onehot", "packed"),
 ))

@@ -38,6 +38,32 @@ Array = jnp.ndarray
 
 MODES = ("reorder", "counts_only", "positions_only")
 
+# Fused-label ceiling for NON-kernel (vmap-emulation) backends. The vmap
+# stage implementations re-evaluate the bucket spec in EVERY tile stage
+# (prescan and postscan), so wide scans pay the spec twice while the
+# materialized path pays it once plus the n-sized label traffic. Measured
+# host-bench crossover (BENCH_multisplit.json fused_labels sweep re-run at
+# n ∈ {2^18, 2^20}, key-value flat): fused wins up to m=256 (1.03–1.06×)
+# and loses from m=512 (0.95–0.97×). Kernel backends fuse in-register and
+# always win; the radix BitfieldSpec is a shift-and-mask and always wins
+# (measured 1.10× at m=256) — neither consults this ceiling.
+VMAP_FUSION_MAX_BUCKETS = 512
+
+# (backend, spec kind, m_eff) -> (fused?, reason) — recorded so a surprising
+# execution path can be interrogated, mirroring tiles.family_decision.
+_FUSION_CACHE: dict = {}
+
+
+def fusion_decision(backend: str, spec_kind: str, m_eff: int):
+    """(fused?, reason) recorded for one (backend, spec-kind, m_eff) shape by
+    :meth:`PipelineSpec.label_fusion`, or None if that shape never decided."""
+    return _FUSION_CACHE.get((backend, spec_kind, m_eff))
+
+
+def fusion_decisions() -> dict:
+    """Snapshot of every recorded label-fusion decision so far."""
+    return dict(_FUSION_CACHE)
+
 
 class Stage(NamedTuple):
     """One node of a spec's stage graph: ``name`` is the pipeline role
@@ -80,6 +106,15 @@ class PipelineSpec:
     specs keep hashing equal and jit caches keyed on a plan never retrace
     across family-equal resolutions. The two families are bitwise-identical
     (property-tested); the field changes execution cost only.
+
+    ``digit_split`` (DESIGN.md §13) marks a FUSED TWO-DIGIT radix plan: the
+    bucket spec is the combined ``2r``-bit pair
+    :class:`~repro.core.identifiers.BitfieldSpec` and ``digit_split`` the
+    low-digit width ``r``, so the tile stage runs the digit-``d`` solve, a
+    stable in-VMEM reorder, and the digit-``d+1`` solve per residency —
+    bitwise identical to the plain ``2r``-bit plan (the LSD identity:
+    two chained stable passes == one stable pass by the combined digit),
+    but with ``r``-wide local solves instead of an ``m²``-wide one.
     """
 
     n: int
@@ -93,6 +128,7 @@ class PipelineSpec:
     segments: Optional[int] = None                 # ragged segments over (n,)
     mode: str = "reorder"
     family: str = "onehot"
+    digit_split: Optional[int] = None              # fused pair low-digit width
 
     # -- resolved properties ----------------------------------------------
     @property
@@ -125,7 +161,16 @@ class PipelineSpec:
         label-fusing tiled backend, and — on kernel backends — keys of the
         kernel lane width.  When False the plan materializes labels through
         :meth:`_host_labels` (the pre-PR-4 behavior, kept for CallableSpec
-        and off-width keys in partial modes)."""
+        and off-width keys in partial modes).
+
+        Eligible shapes then consult a MEASURED cost decision (recorded with
+        its reason — :func:`fusion_decision`): vmap-emulation backends
+        re-evaluate the spec per stage, so generic fusable specs materialize
+        once the scan width reaches ``VMAP_FUSION_MAX_BUCKETS``; kernel
+        backends (in-register labels) and the radix
+        :class:`~repro.core.identifiers.BitfieldSpec` (a shift-and-mask,
+        and the chained radix pipeline's zero-label-traffic guarantee)
+        always fuse."""
         bf = self.bucket_fn
         if bf is None or not bf.fusable:
             return False
@@ -134,7 +179,34 @@ class PipelineSpec:
             return False
         if be.key_itemsize is not None and keys.dtype.itemsize != be.key_itemsize:
             return False
-        return True
+        if self.digit_split is not None:
+            return True               # fused2 kernels take the KEY strip only
+        key = (self.backend, type(bf).__name__, self.m_eff)
+        hit = _FUSION_CACHE.get(key)
+        if hit is None:
+            if isinstance(bf, BitfieldSpec):
+                hit = (True, (
+                    "radix BitfieldSpec: digit extraction is a shift-and-mask "
+                    "(measured 1.10x over materialized at m=256) and chained "
+                    "radix guarantees zero label traffic"
+                ))
+            elif be.uses_kernels:
+                hit = (True, "kernel backend: labels are computed in-register")
+            elif self.m_eff >= VMAP_FUSION_MAX_BUCKETS:
+                hit = (False, (
+                    f"m_eff={self.m_eff} >= {VMAP_FUSION_MAX_BUCKETS}: vmap "
+                    f"stages re-evaluate the spec per stage, measured slower "
+                    f"than one materialized label pass at this width "
+                    f"(0.95-0.97x at m=512)"
+                ))
+            else:
+                hit = (True, (
+                    f"m_eff={self.m_eff} < {VMAP_FUSION_MAX_BUCKETS}: in-stage "
+                    f"labels beat the n-sized label round trip at this width "
+                    f"(measured 1.03-1.06x up to m=256)"
+                ))
+            _FUSION_CACHE[key] = hit
+        return hit[0]
 
     def _host_labels(self, keys: Array) -> Array:
         """THE single label-materialization door of the tiled layout stage.
@@ -161,6 +233,26 @@ class PipelineSpec:
         suffix on the local-solve stages."""
         be = get_backend(self.backend)
         kernel = be.uses_kernels
+        if self.digit_split is not None and be.tiled:
+            # fused two-digit pair plans (§13): one stage tag family, the
+            # kernel-ness suffix mirrors the single-digit spellings
+            eng = "kernel" if kernel else "vmap"
+            fam = f"-{self.family}"
+            pre = f"prescan:fused2-pair-{eng}"
+            positions = f"postscan:fused2-pair-positions-{eng}{fam}"
+            post = (positions if self.method == "dms"
+                    else f"postscan:fused2-pair-reorder-{eng}{fam}")
+            if self.mode == "counts_only":
+                base = (pre, "reduce:counts")
+            elif self.mode == "positions_only":
+                base = (pre, "scan:global", positions)
+            else:
+                base = (pre, "scan:global", post, "scatter:bucket-major")
+            if self.batch is not None:
+                return (f"layout:batched[{self.batch}]",) + base
+            if self.segments is not None:
+                return (f"layout:segmented[{self.segments}]",) + base
+            return base
         fusable = (self.bucket_fn is not None and self.bucket_fn.fusable
                    and be.fuses_labels)
         fused_id = kernel and fusable
@@ -589,6 +681,31 @@ def _validate_common(method: str, backend: str, mode: str, key_value: bool) -> N
         )
 
 
+def _validate_digit_split(
+    digit_split: Optional[int], bucket_fn, backend: str
+) -> None:
+    if digit_split is None:
+        return
+    from repro.core.pipeline.registry import get_backend as _gb
+
+    be = _gb(backend)
+    if not be.tiled or not be.fuses_digits:
+        raise ValueError(
+            f"backend {backend!r} does not fuse digit pairs (fuses_digits="
+            f"False); run the pair as a plain combined-digit plan instead"
+        )
+    if not isinstance(bucket_fn, BitfieldSpec):
+        raise ValueError(
+            "digit_split requires the combined-pair BitfieldSpec bucket_fn "
+            f"(got {type(bucket_fn).__name__})"
+        )
+    if not 0 < digit_split < bucket_fn.bits:
+        raise ValueError(
+            f"digit_split must split the pair strictly (0 < split < bits); "
+            f"got split={digit_split}, bits={bucket_fn.bits}"
+        )
+
+
 def make_plan(
     n: int,
     num_buckets: int,
@@ -602,6 +719,7 @@ def make_plan(
     segments: Optional[int] = None,
     mode: str = "reorder",
     family: Optional[str] = None,
+    digit_split: Optional[int] = None,
 ) -> MultisplitPlan:
     """Resolve (n, m, method, key-value-ness, backend, mode) into a staged
     plan.
@@ -620,15 +738,22 @@ def make_plan(
     _validate_layout(batch, segments)
     if bucket_fn is not None:
         bucket_fn = as_spec(bucket_fn)
+    _validate_digit_split(digit_split, bucket_fn, backend)
     m_eff = num_buckets * (segments or 1)
-    resolved_family = resolve_kernel_family(n, m_eff, method, backend, family)
+    digits = 1 if digit_split is None else 2
+    # the fused-pair local solves are digit_split-wide, not m-wide: family
+    # (and tile VMEM cost) follow the STAGE width, the scan width stays m_eff
+    fam_m = m_eff if digit_split is None else (1 << digit_split) * (segments or 1)
+    resolved_family = resolve_kernel_family(n, fam_m, method, backend, family)
     resolved_tile = resolve_tile(
-        n, m_eff, method, key_value, backend, tile, family=resolved_family
+        n, m_eff, method, key_value, backend, tile, family=resolved_family,
+        digits=digits, stage_m=None if digit_split is None else fam_m,
     )
     return MultisplitPlan(
         n=n, num_buckets=num_buckets, method=method, key_value=key_value,
         backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
         batch=batch, segments=segments, mode=mode, family=resolved_family,
+        digit_split=digit_split,
     )
 
 
@@ -645,15 +770,17 @@ def make_radix_plan(
     segments: Optional[int] = None,
     mode: str = "reorder",
     family: Optional[str] = None,
+    digit_split: Optional[int] = None,
 ) -> MultisplitPlan:
     """A plan whose bucket spec is the radix digit
     :class:`~repro.core.identifiers.BitfieldSpec`(shift, bits) — label-fused
     into the tile stage on fusing backends (in-register in the kernels; no
-    label array anywhere)."""
+    label array anywhere).  ``digit_split=r`` marks ``bits`` as a fused
+    TWO-digit pair (low digit ``r`` bits wide, DESIGN.md §13)."""
     return make_plan(
         n, 1 << bits, method=method, key_value=key_value, backend=backend,
         tile=tile, bucket_fn=BitfieldSpec(shift, bits), batch=batch,
-        segments=segments, mode=mode, family=family,
+        segments=segments, mode=mode, family=family, digit_split=digit_split,
     )
 
 

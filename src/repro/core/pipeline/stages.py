@@ -141,6 +141,44 @@ def packed_tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
     return packed_local_offsets(ids, packed_layout(ids.shape[0], m))
 
 
+# ---------------------------------------------------------------------------
+# Fused two-digit stage primitives (DESIGN.md §13): the jnp re-exports of the
+# fused2 kernel bodies in :mod:`repro.kernels.common` — TWO radix digit
+# solves per tile residency over the combined 2r-bit pair digit. Re-exported
+# here (like the packed solve above) so the vmap backend executes the SAME
+# body the Pallas kernels run, making the fused path bitwise-testable
+# against chained single-digit passes on every backend.
+# ---------------------------------------------------------------------------
+
+def fused2_tile_counts(
+    keys: Array, shift: int, bits: int,
+    seg: Optional[Array] = None, num_segments: int = 1,
+) -> Array:
+    """Per-tile histogram over the combined pair digit (O(T) scatter-add)."""
+    from repro.kernels.common import fused2_counts_body
+
+    return fused2_counts_body(
+        keys, shift, bits, seg=seg, num_segments=num_segments
+    )
+
+
+def fused2_tile_postscan(
+    keys: Array, g_row: Array, vals: Optional[Array],
+    shift: int, split: int, bits: int,
+    seg: Optional[Array] = None, num_segments: int = 1,
+    family: str = "onehot",
+):
+    """Per-tile fused two-digit postscan+reorder: digit-``d`` solve, stable
+    in-tile reorder, digit-``d+1`` solve on the reordered tile; returns the
+    ``(keys_r, vals_r, pos_r, perm)`` contract of the fused reorder stage."""
+    from repro.kernels.common import fused2_postscan_body
+
+    return fused2_postscan_body(
+        keys, g_row, vals, shift, split, bits,
+        seg=seg, num_segments=num_segments, family=family,
+    )
+
+
 def packed_direct_solve_ids(
     keys: Array, ids: Array, m: int, values: Optional[Array]
 ) -> MultisplitResult:

@@ -39,9 +39,13 @@ _MIN_TILE = 256
 
 # Kernel families (DESIGN.md §12). The family heuristic switches to packed
 # counters once the bucket axis is wide enough that the dense one-hot
-# dominates the tile working set.
+# dominates the tile working set. The flip point is the MEASURED host-bench
+# crossover (BENCH_multisplit.json packed_vs_onehot sweep re-run at
+# n ∈ {2^18, 2^20}, key-value flat multisplit): packed already wins at m=8
+# (1.12–1.25×) and only ties at m=4 — the original 64 was a working-set
+# argument that left the whole 8 ≤ m < 64 band on the slower family.
 FAMILIES = ("onehot", "packed")
-PACKED_MIN_BUCKETS = 64
+PACKED_MIN_BUCKETS = 8
 
 _TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
 # (n, m_eff, method, backend) -> (family, reason). Reasons are recorded so
@@ -69,16 +73,45 @@ def _family_cost_bytes(t: int, m: int, family: str) -> int:
     return 4 * (2 * t * m_pad + 2 * t * t + 8 * t)
 
 
+def _fused2_cost_bytes(t: int, m: int, stage_m: int, family: str,
+                       key_value: bool) -> int:
+    """Per-tile working set of the fused TWO-digit postscan (DESIGN.md §13):
+    the double-resident tile model of
+    :func:`repro.kernels.common.fused2_vmem_bytes` — the sub-digit LSD
+    sweep's reused stage plane plus the ``m``-wide combined pair rows."""
+    from repro.kernels.common import fused2_vmem_bytes
+
+    return fused2_vmem_bytes(
+        t, stage_m, family=family, key_value=key_value,
+        m_hi=max(1, m // stage_m),
+    )
+
+
 def _heuristic_tile(
-    n: int, m: int, method: str, backend: str, family: str = "onehot"
+    n: int, m: int, method: str, backend: str, family: str = "onehot",
+    digits: int = 1, stage_m: Optional[int] = None, key_value: bool = False,
 ) -> int:
     from repro.core.pipeline.registry import get_backend
 
     base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
     tile = base
-    if get_backend(backend).uses_kernels:
-        while tile > _MIN_TILE and _family_cost_bytes(tile, m, family) > _VMEM_BUDGET_BYTES:
+    if digits == 2:
+        cost = lambda t: _fused2_cost_bytes(
+            t, m, stage_m or max(1, int(m ** 0.5)), family, key_value
+        )
+        # A fused pair's global-scan traffic is L·m² words (L = tile count),
+        # so pairs only profit when L is SMALL — grow the tile toward the
+        # VMEM budget (the sub-digit LSD working set is ~linear in T with a
+        # small constant) instead of shrinking from the single-digit base.
+        while tile * 2 <= max(n, base) and cost(tile * 2) <= _VMEM_BUDGET_BYTES:
+            tile *= 2
+        while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
             tile //= 2
+    else:
+        cost = lambda t: _family_cost_bytes(t, m, family)
+        if get_backend(backend).uses_kernels:
+            while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
+                tile //= 2
     if n < tile:
         # tiny input: one tile, padded to the next power of two (>= 128 lanes)
         tile = max(128, 1 << max(n - 1, 0).bit_length())
@@ -157,8 +190,15 @@ def resolve_tile(
     backend: str,
     requested: Optional[int] = None,
     family: Optional[str] = None,
+    digits: int = 1,
+    stage_m: Optional[int] = None,
 ) -> int:
     """Tile height for one subproblem; cached per shape, overridable.
+
+    ``digits=2`` selects the fused two-digit footprint (DESIGN.md §13): the
+    cache gains a digits slot (the single-digit key shape is unchanged) and
+    the heuristic charges the DOUBLE-resident tile — two ``stage_m``-wide
+    stage solves plus the m-wide pair rows — instead of one m-wide solve.
 
     The cache key is purely the spec VALUE shape — ``(n, m_eff, method,
     key_value, backend)``, with ``m_eff`` derived from the (hashable)
@@ -174,22 +214,28 @@ def resolve_tile(
     later same-shape calls resolve to (regression-tested)."""
     if requested is not None:
         return requested
-    auto_family = resolve_kernel_family(n, m, method, backend)
+    kw = dict(digits=digits, stage_m=stage_m, key_value=key_value)
+    fam_m = m if digits == 1 else (stage_m or max(1, int(m ** 0.5)))
+    auto_family = resolve_kernel_family(n, fam_m, method, backend)
     fam = auto_family if family is None else family
     if fam != auto_family:
-        return _heuristic_tile(n, m, method, backend, family=fam)
-    key = (n, m, method, key_value, backend)
+        return _heuristic_tile(n, m, method, backend, family=fam, **kw)
+    key = ((n, m, method, key_value, backend) if digits == 1
+           else (n, m, method, key_value, backend, digits))
     tile = _TILE_CACHE.get(key)
     if tile is None:
-        tile = _heuristic_tile(n, m, method, backend, family=fam)
+        tile = _heuristic_tile(n, m, method, backend, family=fam, **kw)
         _TILE_CACHE[key] = tile
     return tile
 
 
 def clear_tile_cache() -> None:
-    """Drop every memoized tile AND family decision."""
+    """Drop every memoized tile, family AND label-fusion decision."""
+    from repro.core.pipeline import spec as _spec
+
     _TILE_CACHE.clear()
     _FAMILY_CACHE.clear()
+    _spec._FUSION_CACHE.clear()
 
 
 def autotune_tile(

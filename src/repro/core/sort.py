@@ -51,6 +51,7 @@ def radix_sort(
     backend: Optional[str] = None,
     tile: Optional[int] = None,
     family: Optional[str] = None,
+    fuse_digits: bool = False,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort uint32 keys with ⌈key_bits/radix_bits⌉ multisplit passes (§7.1).
 
@@ -69,6 +70,12 @@ def radix_sort(
     2-D ``(b, n)`` keys sort every row independently through BATCHED radix
     plans (DESIGN.md §9): still one kernel launch per pass, covering all
     rows. Bitwise identical to :func:`radix_sort_per_pass`.
+
+    ``fuse_digits=True`` (DESIGN.md §13) runs adjacent digit passes as FUSED
+    PAIRS: one sweep per pair — two digit solves around an in-VMEM reorder
+    per tile residency, one HBM scatter per pair instead of per digit
+    (r=8 → 2 sweeps instead of 4, plus a trailing single pass for odd
+    schedules). Bitwise identical to the unfused sort on every backend.
     """
     resolved = resolve_backend(use_pallas, interpret, backend)
     if keys.ndim == 2:
@@ -85,6 +92,7 @@ def radix_sort(
         tile=tile,
         batch=batch,
         family=family,
+        fuse_digits=fuse_digits,
     )
     return pipe(keys, values)
 
@@ -102,6 +110,7 @@ def segmented_radix_sort(
     backend: Optional[str] = None,
     tile: Optional[int] = None,
     family: Optional[str] = None,
+    fuse_digits: bool = False,
 ) -> Tuple[Array, Optional[Array]]:
     """Sort every ragged segment of flat uint32 ``keys`` independently, in
     ONE chained sequence of ⌈key_bits/radix_bits⌉ segmented multisplit
@@ -127,6 +136,7 @@ def segmented_radix_sort(
         tile=tile,
         segments=int(seg.shape[0]),
         family=family,
+        fuse_digits=fuse_digits,
     )
     return pipe(keys, values, segment_starts=seg)
 

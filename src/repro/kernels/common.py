@@ -295,6 +295,200 @@ def packed_postscan_body(ids, g_row, keys, vals, layout: PackedLayout):
     return keys_r, vals_r, pos_r, gpos
 
 
+# ---------------------------------------------------------------------------
+# Fused two-digit radix bodies (DESIGN.md §13): TWO digit passes per VMEM
+# residency. One tile of keys (and values) is loaded once; the digit-d local
+# solve reorders the tile IN VMEM, the digit-(d+1) solve then runs on the
+# locally-reordered tile, and the emitted histogram covers the combined
+# 2r-bit pair digit — so the global scan layer places elements with a SINGLE
+# HBM scatter per digit *pair* instead of per digit. Correctness rests on the
+# LSD identity: two chained stable passes over digits (lo, hi) equal ONE
+# stable pass over the combined bitfield ``hi·2^r_lo + lo`` — the pair is
+# just a ``2r``-bit BitfieldSpec at the tile level.
+#
+# The same identity applies INSIDE the tile, so the postscan body decomposes
+# the 2r-bit in-tile solve all the way down to ``_FUSED2_SUB_BITS``-wide
+# sub-digit stages (an in-VMEM LSD sweep: stable stage solve + in-VMEM
+# reorder per sub-digit, segment id as the most-significant stage). Narrow
+# stages keep every solve plane at T×2^sub instead of T×m — measured ~2×
+# cheaper than two m-wide stage solves at r=8 and strictly less VMEM; the
+# dense direct solve would need a T×m² one-hot, which never exists (the only
+# m²-wide objects are histogram/scan ROWS). Like the packed family, the
+# bodies use in-tile gathers/scatters, so the kernels are interpret-verified
+# (ROADMAP item: Mosaic lowering of gathers is future work).
+# ---------------------------------------------------------------------------
+
+# In-tile sub-digit stage width of the fused2 LSD sweep. 4 bits = 16-wide
+# stage solves: measured fastest on the host bench for BOTH families (2-bit
+# stages double the stage count, 8-bit stages quadruple the plane width).
+_FUSED2_SUB_BITS = 4
+
+
+def fused2_split_digits(keys: Array, shift: int, bits_lo: int, bits_hi: int):
+    """(lo, hi) digit strips of the pair bitfield at ``shift`` — the same
+    arithmetic as ``BitfieldSpec.emit`` on each half, so the fused pair is
+    bitwise consistent with the two chained single-digit passes."""
+    u = keys.astype(jnp.uint32)
+    lo = ((u >> jnp.uint32(shift)) & jnp.uint32((1 << bits_lo) - 1)).astype(jnp.int32)
+    hi = ((u >> jnp.uint32(shift + bits_lo))
+          & jnp.uint32((1 << bits_hi) - 1)).astype(jnp.int32)
+    return lo, hi
+
+
+def _dense_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
+    """Dense int32 one-hot/cumsum local solve: (stable in-bucket rank, tile
+    histogram). The jnp form shared by the fused2 stage solves (the MXU f32
+    form of :func:`fused_postscan_body` is not needed here — the fused2 body
+    is gather/scatter-based like the packed family)."""
+    t = ids.shape[0]
+    one_hot = (ids[:, None] == jnp.arange(m, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+    incl = jnp.cumsum(one_hot, axis=0)
+    local = jnp.take_along_axis(incl, ids[:, None].astype(jnp.int32), axis=1)[:, 0] - 1
+    return local.astype(jnp.int32), incl[t - 1].astype(jnp.int32)
+
+
+def _fused2_stage_local(ids: Array, m: int, family: str) -> Tuple[Array, Array]:
+    """One m-wide stage solve of the fused pair, in the plan's kernel family."""
+    if family == "packed":
+        return packed_local_offsets(ids, packed_layout(ids.shape[0], m))
+    return _dense_local_offsets(ids, m)
+
+
+def fused2_counts_body(
+    keys: Array,
+    shift: int,
+    bits: int,
+    seg: Optional[Array] = None,
+    num_segments: int = 1,
+) -> Array:
+    """Per-tile histogram over the combined ``bits``-wide pair digit (the
+    fused2 prescan): an O(T) scatter-add — the pair axis is m² wide, so the
+    dense T×m² one-hot is never built. Order-invariant, hence computed on
+    the UN-reordered tile; bitwise equal to the histogram the postscan body
+    derives from its cell counts."""
+    m2 = 1 << bits
+    u = keys.astype(jnp.uint32)
+    pair = ((u >> jnp.uint32(shift)) & jnp.uint32(m2 - 1)).astype(jnp.int32)
+    cg = pair if seg is None else seg * m2 + pair
+    return jnp.zeros((m2 * num_segments,), jnp.int32).at[cg].add(1)
+
+
+def fused2_postscan_body(
+    keys: Array,
+    g_row: Array,
+    vals: Optional[Array],
+    shift: int,
+    split: int,
+    bits: int,
+    seg: Optional[Array] = None,
+    num_segments: int = 1,
+    family: str = "onehot",
+):
+    """THE fused two-digit postscan+reorder: same contract as
+    :func:`fused_postscan_body` / :func:`packed_postscan_body` —
+    (keys_r, vals_r_or_None, pos_r, gpos), the first three combined-bucket-
+    major within the tile — but over the ``bits``-wide PAIR digit.
+
+    ``split`` is the schedule-level boundary between the pair's two logical
+    digits (it fixes which two chained passes the pair replaces). By the LSD
+    identity the RESULT depends only on the combined stable pass, not on how
+    the in-tile solve is decomposed — so the body is free to decompose
+    further: an in-VMEM LSD sweep over ``_FUSED2_SUB_BITS``-wide sub-digit
+    stages (stable stage solve + keys/index scatter per stage, segment id as
+    the most-significant stage). Each stage's solve plane is T×2^sub instead
+    of T×m — measured ~2× cheaper than two ``split``-wide stage solves at
+    r=8 — and after the sweep the tile is already (seg, pair)-bucket-major,
+    so the stable in-cell rank is just position minus the cell's tile start.
+    The caller's single scatter per pair stays bitwise identical to the two
+    chained single-digit scatters it replaces.
+    """
+    t = keys.shape[0]
+    del split  # decomposition is sub-digit-wide; result is split-invariant
+    m2 = 1 << bits
+    idx = jnp.arange(t, dtype=jnp.int32)
+    keys2, idx2 = keys, idx
+
+    def _stage(d, m, keys2, idx2):
+        local, hist = _fused2_stage_local(d, m, family)
+        starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+        dest = starts[d] + local
+        return (jnp.zeros_like(keys2).at[dest].set(keys2),
+                jnp.zeros_like(idx2).at[dest].set(idx2))
+
+    # ---- in-VMEM LSD sweep: sub-digit stages LSB→MSB across the pair bits;
+    # values/segments are never scattered per stage — idx2 tracks the source
+    # slot, so they are gathered once at the end.
+    for off in range(0, bits, _FUSED2_SUB_BITS):
+        b = min(_FUSED2_SUB_BITS, bits - off)
+        m = 1 << b
+        d = ((keys2.astype(jnp.uint32) >> jnp.uint32(shift + off))
+             & jnp.uint32(m - 1)).astype(jnp.int32)
+        keys2, idx2 = _stage(d, m, keys2, idx2)
+    if seg is not None and num_segments > 1:
+        keys2, idx2 = _stage(seg[idx2], num_segments, keys2, idx2)
+
+    # ---- placement: the tile is (seg, pair)-bucket-major, so the stable
+    # in-cell rank is position minus the cell's tile start
+    pair2 = ((keys2.astype(jnp.uint32) >> jnp.uint32(shift))
+             & jnp.uint32(m2 - 1)).astype(jnp.int32)
+    cg2 = pair2 if seg is None else seg[idx2] * m2 + pair2
+    hist_c = jnp.zeros((m2 * num_segments,), jnp.int32).at[cg2].add(1)
+    starts_t = (jnp.cumsum(hist_c) - hist_c).astype(jnp.int32)
+    local_c = idx - starts_t[cg2]
+    gpos2 = (g_row.astype(jnp.int32)[cg2] + local_c).astype(jnp.int32)
+
+    vals_r = vals[idx2] if vals is not None else None
+    gpos = jnp.zeros_like(gpos2).at[idx2].set(gpos2)        # element-ordered perm
+    return keys2, vals_r, gpos2, gpos
+
+
+def fused2_positions_body(
+    keys: Array,
+    g_row: Array,
+    shift: int,
+    split: int,
+    bits: int,
+    seg: Optional[Array] = None,
+    num_segments: int = 1,
+    family: str = "onehot",
+) -> Array:
+    """Fused2 DMS postscan: global pair destinations in element order —
+    the ``gpos`` byproduct of the full body (the in-VMEM reorder is still
+    how the combined rank is derived)."""
+    return fused2_postscan_body(
+        keys, g_row, None, shift, split, bits, seg=seg,
+        num_segments=num_segments, family=family,
+    )[3]
+
+
+def fused2_vmem_bytes(
+    tile: int, m_lo: int, num_segments: int = 1, family: str = "onehot",
+    key_value: bool = False, m_hi: Optional[int] = None,
+) -> int:
+    """Working-set model of the DOUBLE-RESIDENT fused2 tile, in bytes: ONE
+    sub-digit-wide stage solve plane (reused across the LSD sweep's stages —
+    width ``min(2^_FUSED2_SUB_BITS, m)``, or ``num_segments`` if wider), the
+    reordered keys/index copies living alongside the originals (+ the values
+    gather when key-value), and the m²-wide histogram/scan/starts rows. The
+    tile heuristic budgets this instead of the single-digit cost when
+    ``digits=2`` (DESIGN.md §13) — note it grows only ~linearly in T with a
+    SMALL constant, which is what lets fused tiles be much larger than
+    single-digit ones (and they must be: a pair's G traffic is L·m² words,
+    so the pair only profits when L is small)."""
+    m_hi = m_lo if m_hi is None else m_hi
+    m2 = m_lo * m_hi
+    stage_w = max(min(1 << _FUSED2_SUB_BITS, max(m_lo, m_hi)), num_segments)
+    if family == "packed":
+        lay = packed_layout(tile, stage_w)
+        solve = 4 * (2 * tile * lay.w + 3 * lay.n_sub * stage_w)
+    else:
+        solve = 4 * 2 * tile * pad_lanes(stage_w)
+    # keys + keys2 + idx2 + digit strip + dest (+ values, values gather)
+    resident = 4 * tile * (5 + (2 if key_value else 0))
+    pair_rows = 4 * 3 * m2 * num_segments                   # hist / G row / starts
+    return solve + resident + pair_rows
+
+
 def permute_matmul_32(perm: Array, x: Array) -> Array:
     """Permute a (T,) vector of 32-bit words by the (T, T) matrix ``perm``.
 

@@ -64,6 +64,9 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import (
     cumsum_mxu as _cumsum_mxu,
     exclusive_starts_mxu,
+    fused2_counts_body,
+    fused2_positions_body,
+    fused2_postscan_body,
     fused_postscan_body,
     one_hot_f32 as _one_hot,
     packed_counts,
@@ -783,6 +786,185 @@ def packed_fused_postscan_reorder_pallas(
         functools.partial(
             _packed_fused_kernel, spec=spec, m=m, has_seg=has_seg,
             has_keys=has_keys, has_values=has_values, layout=layout,
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if has_values:
+        keys_r, vals_r, pos_r, perm = out
+        return keys_r, vals_r, pos_r, perm
+    keys_r, pos_r, perm = out
+    return keys_r, None, pos_r, perm
+
+
+# ---------------------------------------------------------------------------
+# FUSED TWO-DIGIT kernels (DESIGN.md §13): one grid program runs TWO radix
+# digit passes per VMEM residency — digit-d solve, in-VMEM reorder, digit-
+# (d+1) solve on the reordered tile — and emits the combined 2r-bit pair
+# histogram, so the caller scatters through HBM once per digit PAIR. The
+# pair digit is a static BitfieldSpec (shift, 2r) with ``split`` marking the
+# low-digit width; ``family`` selects the m-wide stage-solve family (dense
+# one-hot or packed subword counters). Inherently label-fused: the kernels
+# take KEY strips only. Like the packed family, three generic entry points
+# cover {flat | segmented} × {keys-only | key-value}.
+# ---------------------------------------------------------------------------
+
+def _fused2_hist_kernel(*refs, shift: int, bits: int, num_segments: int,
+                        has_seg: bool):
+    if has_seg:
+        keys_ref, seg_ref, hist_ref = refs
+    else:
+        (keys_ref, hist_ref), seg_ref = refs, None
+    hist_ref[0, :] = fused2_counts_body(
+        keys_ref[0, :], shift, bits,
+        seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
+    )
+
+
+def fused2_tile_histograms_pallas(
+    keys_tiled: Array,
+    spec,
+    *,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    interpret: bool = True,
+) -> Array:
+    """Fused2 prescan: (L, T) keys [+ (L, T) segment ids] -> (L, s·m²)
+    combined pair histograms (an O(T) in-kernel scatter-add; the m²-wide
+    one-hot never exists)."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    has_seg = seg_tiled is not None
+    return pl.pallas_call(
+        functools.partial(
+            _fused2_hist_kernel, shift=spec.shift, bits=spec.bits,
+            num_segments=num_segments, has_seg=has_seg,
+        ),
+        grid=(n_tiles,),
+        in_specs=[row] * (2 if has_seg else 1),
+        out_specs=pl.BlockSpec((1, m_eff), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, m_eff), jnp.int32),
+        interpret=interpret,
+    )(*((keys_tiled, seg_tiled) if has_seg else (keys_tiled,)))
+
+
+def _fused2_positions_kernel(*refs, shift: int, split: int, bits: int,
+                             num_segments: int, family: str, has_seg: bool):
+    if has_seg:
+        keys_ref, seg_ref, g_ref, pos_ref = refs
+    else:
+        (keys_ref, g_ref, pos_ref), seg_ref = refs, None
+    pos_ref[0, :] = fused2_positions_body(
+        keys_ref[0, :], g_ref[0, :], shift, split, bits,
+        seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
+        family=family,
+    )
+
+
+def fused2_tile_positions_pallas(
+    keys_tiled: Array,
+    g: Array,
+    spec,
+    split: int,
+    *,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    family: str = "onehot",
+    interpret: bool = True,
+) -> Array:
+    """Fused2 DMS postscan: (L, T) keys + (L, s·m²) pair bases -> (L, T)
+    element-ordered global pair destinations (paper eq. (2) over the
+    combined digit)."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    grow = pl.BlockSpec((1, m_eff), lambda i: (i, 0))
+    has_seg = seg_tiled is not None
+    in_specs = [row, row, grow] if has_seg else [row, grow]
+    args = (keys_tiled, seg_tiled, g) if has_seg else (keys_tiled, g)
+    return pl.pallas_call(
+        functools.partial(
+            _fused2_positions_kernel, shift=spec.shift, split=split,
+            bits=spec.bits, num_segments=num_segments, family=family,
+            has_seg=has_seg,
+        ),
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(*args)
+
+
+def _fused2_fused_kernel(*refs, shift: int, split: int, bits: int,
+                         num_segments: int, family: str, has_seg: bool,
+                         has_values: bool):
+    refs = list(refs)
+    keys_ref = refs.pop(0)
+    seg_ref = refs.pop(0) if has_seg else None
+    g_ref = refs.pop(0)
+    vals_ref = refs.pop(0) if has_values else None
+    if has_values:
+        keys_out_ref, vals_out_ref, pos_out_ref, perm_out_ref = refs
+    else:
+        (keys_out_ref, pos_out_ref, perm_out_ref), vals_out_ref = refs, None
+
+    keys_r, vals_r, pos_r, gpos = fused2_postscan_body(
+        keys_ref[0, :], g_ref[0, :],
+        vals_ref[0, :] if has_values else None, shift, split, bits,
+        seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
+        family=family,
+    )
+    keys_out_ref[0, :] = keys_r
+    pos_out_ref[0, :] = pos_r
+    perm_out_ref[0, :] = gpos                               # element-ordered perm
+    if has_values:
+        vals_out_ref[0, :] = vals_r
+
+
+def fused2_fused_postscan_reorder_pallas(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array] = None,
+    *,
+    spec,
+    split: int,
+    seg_tiled: Optional[Array] = None,
+    num_segments: int = 1,
+    family: str = "onehot",
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE fused two-digit postscan+reorder: output contract of
+    :func:`fused_postscan_reorder_pallas` over the combined pair digit —
+    both digit solves and the intermediate reorder stay in VMEM; the
+    caller's single scatter per PAIR is the only HBM round trip."""
+    n_tiles, t = keys_tiled.shape
+    m_eff = spec.num_buckets * num_segments
+    has_seg = seg_tiled is not None
+    has_values = values_tiled is not None
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    grow = pl.BlockSpec((1, m_eff), lambda i: (i, 0))
+    in_specs = ([row] + ([row] if has_seg else []) + [grow]
+                + ([row] if has_values else []))
+    args = ((keys_tiled,) + ((seg_tiled,) if has_seg else ()) + (g,)
+            + ((values_tiled,) if has_values else ()))
+    out_specs = [row] * (4 if has_values else 3)
+    out_shape = [jax.ShapeDtypeStruct((n_tiles, t), keys_tiled.dtype)]
+    if has_values:
+        out_shape.append(jax.ShapeDtypeStruct((n_tiles, t), values_tiled.dtype))
+    out_shape += [
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+    ]
+    out = pl.pallas_call(
+        functools.partial(
+            _fused2_fused_kernel, shift=spec.shift, split=split,
+            bits=spec.bits, num_segments=num_segments, family=family,
+            has_seg=has_seg, has_values=has_values,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,

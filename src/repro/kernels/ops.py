@@ -215,6 +215,70 @@ def packed_fused_postscan_reorder(
     )
 
 
+# -- fused two-digit entry points (DESIGN.md §13): TWO radix digit passes per
+# VMEM residency. ``spec`` is the combined 2r-bit pair BitfieldSpec and
+# ``split`` the low-digit width — both static, like every pair-schedule knob,
+# so all tiles of all pair passes with equal (spec, split, config) share one
+# trace. ONE wrapper per stage covers {flat | segmented} × {keys | key-value}.
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_segments", "interpret"))
+def fused2_tile_histograms(
+    keys_tiled: Array,
+    seg_tiled: Optional[Array] = None,
+    *,
+    spec,
+    num_segments: int = 1,
+    interpret: bool = True,
+) -> Array:
+    """THE fused2 prescan entry point (see multisplit_tile)."""
+    return _mst.fused2_tile_histograms_pallas(
+        keys_tiled, spec, seg_tiled=seg_tiled, num_segments=num_segments,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "split", "num_segments", "family", "interpret"))
+def fused2_tile_positions(
+    keys_tiled: Array,
+    g: Array,
+    seg_tiled: Optional[Array] = None,
+    *,
+    spec,
+    split: int,
+    num_segments: int = 1,
+    family: str = "onehot",
+    interpret: bool = True,
+) -> Array:
+    """THE fused2 DMS postscan entry point (see multisplit_tile)."""
+    return _mst.fused2_tile_positions_pallas(
+        keys_tiled, g, spec, split, seg_tiled=seg_tiled,
+        num_segments=num_segments, family=family, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "split", "num_segments", "family", "interpret"))
+def fused2_fused_postscan_reorder(
+    keys_tiled: Array,
+    g: Array,
+    values_tiled: Optional[Array] = None,
+    seg_tiled: Optional[Array] = None,
+    *,
+    spec,
+    split: int,
+    num_segments: int = 1,
+    family: str = "onehot",
+    interpret: bool = True,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """THE fused two-digit postscan+reorder entry point (see multisplit_tile)."""
+    return _mst.fused2_fused_postscan_reorder_pallas(
+        keys_tiled, g, values_tiled, spec=spec, split=split,
+        seg_tiled=seg_tiled, num_segments=num_segments, family=family,
+        interpret=interpret,
+    )
+
+
 # -- segmented entry points (DESIGN.md §9): segment id rides in-kernel ------
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "num_segments", "interpret"))

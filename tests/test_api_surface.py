@@ -22,6 +22,8 @@ EXPECTED_ALL = (
 EXPECTED_SIGNATURES = {
     # PR-5 additively appended keyword-only ``family`` (kernel family,
     # DESIGN.md §12) to every plan-backed op, per the §11 stability policy.
+    # ISSUE 6 additively appended keyword-only ``fuse_digits`` (fused
+    # two-digit radix pairs, DESIGN.md §13) to the two radix sorts.
     "multisplit": (
         "(keys, spec, values=None, *, method='bms', backend='vmap', "
         "tile=None, mode='reorder', family=None)"
@@ -38,12 +40,12 @@ EXPECTED_SIGNATURES = {
     "radix_sort": (
         "(keys, values=None, *, radix_bits=8, key_bits=32, method='bms', "
         "use_pallas=False, interpret=True, backend=None, tile=None, "
-        "family=None)"
+        "family=None, fuse_digits=False)"
     ),
     "segmented_radix_sort": (
         "(keys, segment_starts, values=None, *, radix_bits=8, key_bits=32, "
         "method='bms', use_pallas=False, interpret=True, backend=None, "
-        "tile=None, family=None)"
+        "tile=None, family=None, fuse_digits=False)"
     ),
     "delta_buckets": "(num_buckets, key_max=1073741824)",
     "identity_buckets": "(num_buckets)",

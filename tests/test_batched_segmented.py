@@ -100,12 +100,14 @@ def _count_calls(monkeypatch, module, name):
 def test_batched_pallas_is_one_grid_launch(monkeypatch):
     from repro.kernels import ops as kops
 
-    # delta specs are label-fused since PR-4: count the spec entry points
+    # delta specs are label-fused since PR-4: count the spec entry points.
+    # m=4 keeps the dense one-hot family (PACKED_MIN_BUCKETS=8 since ISSUE 6)
+    # so the dense entry points spied on below are the ones dispatched.
     pre = _count_calls(monkeypatch, kops, "spec_tile_histograms")
     post = _count_calls(monkeypatch, kops, "spec_fused_postscan_reorder")
     b, n = 8, 512
     keys = _keys(b * n, seed=7).reshape(b, n)
-    bf = delta_buckets(8, 2**30)
+    bf = delta_buckets(4, 2**30)
     out = batched_multisplit(keys, bf, tile=256, backend="pallas-interpret")
     assert len(pre) == 1 and len(post) == 1       # 8 rows, ONE launch each stage
     ref = multisplit_ref(keys.reshape(-1)[:n], bf)
@@ -115,10 +117,13 @@ def test_batched_pallas_is_one_grid_launch(monkeypatch):
 def test_segmented_pallas_is_one_grid_launch(monkeypatch):
     from repro.kernels import ops as kops
 
-    pre = _count_calls(monkeypatch, kops, "seg_spec_tile_histograms")
-    post = _count_calls(monkeypatch, kops, "seg_spec_fused_postscan_reorder")
+    # the combined seg width (5 segments x 4 buckets = 20 >= 8) selects the
+    # PACKED family since ISSUE 6, whose generic kernels cover flat AND
+    # segmented in the same entry points
+    pre = _count_calls(monkeypatch, kops, "packed_tile_histograms")
+    post = _count_calls(monkeypatch, kops, "packed_fused_postscan_reorder")
     keys = _keys(1000, seed=8)
-    bf = delta_buckets(8, 2**30)
+    bf = delta_buckets(4, 2**30)
     segmented_multisplit(keys, bf, [0, 100, 400, 400, 900], tile=256, backend="pallas-interpret")
     assert len(pre) == 1 and len(post) == 1       # 5 ragged segments, ONE launch
 
@@ -188,7 +193,9 @@ def test_multisplit_all_shards_local_stage_is_one_batched_launch(monkeypatch):
 
     post = _count_calls(monkeypatch, kops, "spec_fused_postscan_reorder")
     keys = _keys(4 * 512, seed=13).reshape(4, 512)
-    bf = delta_buckets(8, 2**30)
+    # m=4 sits below PACKED_MIN_BUCKETS=8 (ISSUE 6), keeping the dense
+    # entry point spied on above as the dispatched one
+    bf = delta_buckets(4, 2**30)
     multisplit_all_shards(keys, bf, tile=256, backend="pallas-interpret")
     assert len(post) == 1                         # 4 shards, ONE local-stage launch
 

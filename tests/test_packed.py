@@ -241,8 +241,8 @@ def test_family_heuristic_and_reasons():
     for backend in TILED_BACKENDS:
         fam, reason = family_decision(1 << 16, 256, "bms", backend)
         assert fam == "packed" and "m_eff=256" in reason
-        fam, reason = family_decision(1 << 16, 8, "bms", backend)
-        assert fam == "onehot" and "m_eff=8" in reason
+        fam, reason = family_decision(1 << 16, 4, "bms", backend)
+        assert fam == "onehot" and "m_eff=4" in reason
     fam, reason = family_decision(1 << 16, 256, "bms", "reference")
     assert fam == "onehot" and "untiled" in reason
     assert ((1 << 16, 256, "bms", "vmap") in family_decisions())
@@ -365,3 +365,15 @@ def test_packed_min_buckets_threshold_is_the_flip_point():
     lo = resolve_kernel_family(1 << 16, PACKED_MIN_BUCKETS - 1, "bms", "vmap")
     hi = resolve_kernel_family(1 << 16, PACKED_MIN_BUCKETS, "bms", "vmap")
     assert (lo, hi) == ("onehot", "packed")
+
+
+def test_packed_min_buckets_matches_measured_crossover():
+    """Regression pin for the MEASURED family crossover (ISSUE 6 satellite).
+
+    The original flip point (64) was a working-set argument; the host-bench
+    packed_vs_onehot sweep (BENCH_multisplit.json, key-value flat multisplit
+    re-measured at n ∈ {2^18, 2^20}) shows packed winning from m=8 up
+    (1.12–1.25× at m=8, ≥1.5× at m=16) and only tying at m=4. If this pin
+    fails, re-run ``benchmarks/bench_multisplit.py`` packed_vs_onehot and
+    move the constant to the new measured crossover — don't guess."""
+    assert PACKED_MIN_BUCKETS == 8

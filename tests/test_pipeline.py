@@ -89,11 +89,12 @@ def test_mode_validation():
 
 
 def test_stage_graph_per_mode():
-    bf = delta_buckets(8)
-    full = make_plan(1024, 8, method="bms", backend="vmap", bucket_fn=bf)
-    co = make_plan(1024, 8, method="bms", backend="vmap", bucket_fn=bf,
+    # m=4 < PACKED_MIN_BUCKETS keeps the stage names family-tag-free
+    bf = delta_buckets(4)
+    full = make_plan(1024, 4, method="bms", backend="vmap", bucket_fn=bf)
+    co = make_plan(1024, 4, method="bms", backend="vmap", bucket_fn=bf,
                    mode="counts_only")
-    po = make_plan(1024, 8, method="bms", backend="pallas-interpret",
+    po = make_plan(1024, 4, method="bms", backend="pallas-interpret",
                    bucket_fn=bf, mode="positions_only")
     assert full.stages() == (
         "prescan:vmap", "scan:global", "postscan:fused-reorder-vmap",
@@ -106,7 +107,7 @@ def test_stage_graph_per_mode():
     )
     assert [s.name for s in co.stage_graph()] == ["prescan", "reduce"]
     assert co.stage_graph()[0].impl == "vmap"
-    seg = make_plan(1024, 8, bucket_fn=bf, segments=4, mode="counts_only")
+    seg = make_plan(1024, 4, bucket_fn=bf, segments=4, mode="counts_only")
     assert seg.stage_graph()[0].name == "layout"
 
 

@@ -68,17 +68,19 @@ def test_plan_validates_inputs():
 def test_stages_description():
     from repro.core.identifiers import from_fn
 
-    bf = delta_buckets(8)
-    vm = msplan.make_plan(1024, 8, method="bms", backend="vmap", bucket_fn=bf)
+    # m=4 sits below PACKED_MIN_BUCKETS, so the stage names carry no
+    # family tag (the packed variants are asserted in test_packed.py)
+    bf = delta_buckets(4)
+    vm = msplan.make_plan(1024, 4, method="bms", backend="vmap", bucket_fn=bf)
     assert vm.stages()[-2] == "postscan:fused-reorder-vmap"
     # fusable specs label-fuse on kernel backends (PR-4): ids in-register
-    pk = msplan.make_plan(1024, 8, method="wms", backend="pallas-interpret", bucket_fn=bf)
+    pk = msplan.make_plan(1024, 4, method="wms", backend="pallas-interpret", bucket_fn=bf)
     assert pk.stages()[0] == "prescan:fused-label-kernel"
     assert pk.stages()[-2] == "postscan:fused-label-reorder-kernel"
     # the callable escape hatch keeps the materialized-labels stages
     cb = msplan.make_plan(
-        1024, 8, method="wms", backend="pallas-interpret",
-        bucket_fn=from_fn(lambda u: u.astype("int32") % 8, 8),
+        1024, 4, method="wms", backend="pallas-interpret",
+        bucket_fn=from_fn(lambda u: u.astype("int32") % 4, 4),
     )
     assert cb.stages()[0] == "prescan:kernel"
     assert cb.stages()[-2] == "postscan:fused-reorder-kernel"

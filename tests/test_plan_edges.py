@@ -246,14 +246,14 @@ def test_segmented_tile_cache_keyed_on_combined_width():
     """Segmented plans budget VMEM for the COMBINED (s*m) scan width, so
     their cache entries must not collide with the flat (n, m) shape."""
     msplan.clear_tile_cache()
-    bf = delta_buckets(16)
-    flat = msplan.make_plan(1 << 18, 16, backend="pallas-interpret", bucket_fn=bf)
+    bf = delta_buckets(4)
+    flat = msplan.make_plan(1 << 18, 4, backend="pallas-interpret", bucket_fn=bf)
     seg = msplan.make_plan(
-        1 << 18, 16, backend="pallas-interpret", bucket_fn=bf, segments=64
+        1 << 18, 4, backend="pallas-interpret", bucket_fn=bf, segments=64
     )
-    assert (1 << 18, 16, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
-    assert (1 << 18, 1024, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
-    # the combined width flips the 1024-wide shape into the PACKED family
+    assert (1 << 18, 4, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
+    assert (1 << 18, 256, "bms", False, "pallas-interpret") in msplan._TILE_CACHE
+    # the combined width flips the 256-wide shape into the PACKED family
     # (PR-5), whose near-flat-in-m working set KEEPS a larger tile than the
     # narrow flat shape allows the dense one-hot — the pre-PR-5 "wider scan
     # => strictly smaller tile" rule only survives within one family
@@ -262,7 +262,7 @@ def test_segmented_tile_cache_keyed_on_combined_width():
     # within the one-hot family the old rule still holds at a width that
     # pushes the working set past the budget floor
     seg1h = msplan.make_plan(
-        1 << 18, 16, backend="pallas-interpret", bucket_fn=bf, segments=256,
+        1 << 18, 4, backend="pallas-interpret", bucket_fn=bf, segments=1024,
         family="onehot",
     )
     assert seg1h.tile < flat.tile
