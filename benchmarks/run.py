@@ -16,10 +16,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     ap.add_argument("--section", action="append",
                     choices=["multisplit", "sort", "histogram", "sssp", "roofline",
-                             "roofline-multisplit"])
+                             "roofline-multisplit", "autotune-drift"])
     args = ap.parse_args()
     sections = args.section or ["multisplit", "sort", "histogram", "sssp",
-                                "roofline", "roofline-multisplit"]
+                                "roofline", "roofline-multisplit",
+                                "autotune-drift"]
 
     print("name,us_per_call,derived")
     if "multisplit" in sections:
@@ -54,6 +55,10 @@ def main() -> None:
         from benchmarks import roofline_multisplit
 
         roofline_multisplit.main(quick=args.quick)
+    if "autotune-drift" in sections:
+        from benchmarks import autotune_drift
+
+        autotune_drift.main(quick=args.quick)
 
 
 if __name__ == "__main__":

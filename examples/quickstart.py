@@ -103,4 +103,26 @@ print(f"fused r=8 sort: {pipe.n_sweeps} sweeps for {pipe.n_passes} digits, "
       f"stage 0 = {pipe.plans[0].stages()[0]!r}")
 # Roofline tracking (ideal bytes vs measured bandwidth, per mode):
 #   PYTHONPATH=src:. python benchmarks/roofline_multisplit.py [--quick]
+
+# --- 9. self-tuning (DESIGN.md §14) -----------------------------------------
+# Opt in and every per-shape decision (tile, family, fused-pair sub_bits,
+# vmap label fusion) resolves by MEASUREMENT on first miss, persisting the
+# winners per host (~/.cache/repro-multisplit by default, or
+# set_autotune(cache_dir=...)) — the second process pays zero search time.
+# Everything stays heuristic until you arm it; REPRO_AUTOTUNE=1 works too.
+import tempfile
+
+from repro.core.pipeline import clear_tile_cache
+
+with tempfile.TemporaryDirectory() as d:                # demo: throwaway cache
+    ops.set_autotune(True, cache_dir=d, trials=1, candidates=(1024, 4096))
+    clear_tile_cache()                                  # force fresh misses
+    tuned_plan = make_plan(1 << 14, 256, bucket_fn=ops.delta_buckets(256, 2**30))
+    fam, why = family_decision(1 << 14, 256, "bms", "vmap")
+    print(f"self-tuned plan: tile={tuned_plan.tile}, family={fam!r}")
+    print(f"  reason: {why[:72]}...")
+    ops.set_autotune(False)
+    clear_tile_cache()
+# The heuristic-vs-tuned gap is tracked and CI-gated:
+#   PYTHONPATH=src:. python benchmarks/autotune_drift.py --quick --ci-max 1.25
 print("quickstart OK")

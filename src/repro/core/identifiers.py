@@ -152,14 +152,31 @@ class BitfieldSpec(BucketSpec):
         return 1 << self.bits
 
     def emit(self, keys: Array) -> Array:
+        self._check_integer(keys.dtype)
         u = keys.astype(jnp.uint32)
         mask = jnp.uint32((1 << self.bits) - 1)
         return ((u >> jnp.uint32(self.shift)) & mask).astype(jnp.int32)
 
+    @staticmethod
+    def _check_integer(dtype) -> None:
+        """Digits are BIT FIELDS of the key word; ``astype`` on a float key
+        is a VALUE conversion, and the float pad lane has no all-ones digit
+        pattern (``pad_key`` used to return ``-1``, i.e. ``-1.0``, which is
+        NOT digit m-1 — it silently corrupted the pad lane)."""
+        if not jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+            raise TypeError(
+                f"radix digit buckets (BitfieldSpec) require integer keys, got "
+                f"{jnp.dtype(dtype)}; bitfield digits of float keys are value "
+                f"conversions, not bit patterns — reinterpret the buffer "
+                f"(e.g. jax.lax.bitcast_convert_type) to uint32 first"
+            )
+
     def pad_key(self, dtype):
         """The ALL-ONES bit pattern (not the signed max): its digit is m-1
-        in every pass, the chained-radix pad invariant."""
+        in every pass, the chained-radix pad invariant.  Raises
+        :class:`TypeError` for float dtypes (see :meth:`_check_integer`)."""
         dtype = jnp.dtype(dtype)
+        self._check_integer(dtype)
         if jnp.issubdtype(dtype, jnp.unsignedinteger):
             return (1 << (8 * dtype.itemsize)) - 1
         return -1
@@ -263,7 +280,14 @@ class EvenSpec(BucketSpec):
         # clip in FLOAT domain: the +inf/fmax pad key must land in the last
         # bucket, and float->int conversion of out-of-range values is
         # platform-defined.
-        return jnp.clip(ids, 0, self.num_buckets - 1).astype(jnp.int32)
+        ids = jnp.clip(ids, 0, self.num_buckets - 1)
+        # NaN keys survive both floor and clip (clip(NaN) is NaN), and
+        # NaN->int conversion is platform-defined (observed: bucket 0).
+        # Route them deterministically into the LAST bucket, matching the
+        # +inf pad sentinel.  ``ids != ids`` is the NaN test that stays a
+        # plain vector compare in-kernel and is False on integer keys.
+        ids = jnp.where(ids != ids, self.num_buckets - 1, ids)
+        return ids.astype(jnp.int32)
 
     @property
     def name(self) -> str:

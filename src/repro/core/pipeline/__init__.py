@@ -21,6 +21,13 @@ structure explicit:
 ``repro.core.plan`` remains a compatibility shim re-exporting this package.
 """
 
+from repro.core.pipeline.autotune import (
+    AutotuneConfig,
+    autotune_fused2,
+    autotune_label_fusion,
+    autotune_status,
+    set_autotune,
+)
 from repro.core.pipeline.radix import RadixPipeline, radix_pass_pairs, radix_passes
 from repro.core.pipeline.registry import (
     BACKENDS,
@@ -72,13 +79,16 @@ from repro.core.pipeline.tiles import (
     family_decision,
     family_decisions,
     resolve_kernel_family,
+    resolve_sub_bits,
     resolve_tile,
 )
 
 __all__ = [
+    "AutotuneConfig",
     "BACKENDS", "BMS_TILE", "Backend", "FAMILIES", "KernelStages", "MODES",
     "MultisplitPlan", "MultisplitResult", "PipelineSpec", "RadixPipeline",
     "Stage", "StageImpl", "VMAP_FUSION_MAX_BUCKETS", "VmapStages", "WMS_TILE",
+    "autotune_fused2", "autotune_label_fusion", "autotune_status",
     "autotune_tile", "available_backends", "backend_names",
     "clear_tile_cache", "direct_counts", "direct_solve_ids",
     "direct_solve_reference", "exclusive_rows", "family_decision",
@@ -89,6 +99,7 @@ __all__ = [
     "packed_direct_solve_ids", "packed_tile_local_offsets", "pad_rows",
     "pad_to_tiles", "radix_pass_pairs", "radix_passes", "register_backend",
     "resolve_backend",
-    "resolve_kernel_family", "resolve_tile", "seg_tile_local",
-    "segment_ids_from_starts", "tile_local_offsets",
+    "resolve_kernel_family", "resolve_sub_bits", "resolve_tile",
+    "seg_tile_local", "segment_ids_from_starts", "set_autotune",
+    "tile_local_offsets",
 ]

@@ -109,6 +109,7 @@ class RadixPipeline:
         segments: Optional[int] = None,
         family: Optional[str] = None,
         fuse_digits: bool = False,
+        sub_bits: Optional[int] = None,
     ):
         self.n = n
         self.key_value = key_value
@@ -132,7 +133,13 @@ class RadixPipeline:
             shift0, bits0, split0 = self.schedule[0]
             m_eff = (1 << bits0) * s
             stage_m = (1 << (split0 or bits0)) * s
-            self.family = resolve_kernel_family(n, stage_m, method, backend, family)
+            # digits=2 keys the family decision separately from genuine
+            # digits=1 plans of m == stage_m: a fused-pair pin must never
+            # re-family a flat plan, or vice versa (regression-tested).
+            self.family = resolve_kernel_family(
+                n, stage_m, method, backend, family, digits=2,
+                key_value=key_value, pair_m=m_eff,
+            )
             self.tile = resolve_tile(
                 n, m_eff, method, key_value, backend, tile, family=self.family,
                 digits=2, stage_m=stage_m,
@@ -142,6 +149,7 @@ class RadixPipeline:
                     n, shift, bits, method=method, key_value=key_value,
                     backend=backend, tile=self.tile, batch=batch,
                     segments=segments, family=self.family, digit_split=split,
+                    sub_bits=sub_bits,
                 )
                 for shift, bits, split in self.schedule
             )
@@ -185,6 +193,15 @@ class RadixPipeline:
             raise ValueError(
                 f"radix pipeline resolved for key_value={self.key_value} but "
                 f"called with values={'present' if values is not None else 'absent'}"
+            )
+        if not jnp.issubdtype(keys.dtype, jnp.integer):
+            # reject BEFORE any pass runs: the BitfieldSpec digit of a float
+            # key is a value conversion (not a bit pattern) and the float
+            # pad lane has no all-ones digit — the old path corrupted it
+            raise TypeError(
+                f"radix sort requires integer keys, got {keys.dtype}; "
+                f"reinterpret the buffer (e.g. jax.lax.bitcast_convert_type) "
+                f"to uint32 first"
             )
         if self.batch is not None:
             return self._call_batched(keys, values)

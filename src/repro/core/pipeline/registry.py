@@ -103,7 +103,8 @@ class KernelStages(StageImpl):
             return kops.fused2_tile_positions(
                 keys_tiled, g, seg_tiled, spec=spec.bucket_fn,
                 split=spec.digit_split, num_segments=s or 1,
-                family=spec.family, interpret=self.interpret,
+                family=spec.family, sub_bits=spec.sub_bits,
+                interpret=self.interpret,
             )
         if spec.family == "packed":              # packed-counter family (§12)
             return kops.packed_tile_positions(
@@ -135,7 +136,8 @@ class KernelStages(StageImpl):
             return kops.fused2_fused_postscan_reorder(
                 keys_tiled, g, vals_tiled, seg_tiled, spec=spec.bucket_fn,
                 split=spec.digit_split, num_segments=s or 1,
-                family=spec.family, interpret=self.interpret,
+                family=spec.family, sub_bits=spec.sub_bits,
+                interpret=self.interpret,
             )
         if spec.family == "packed":              # packed-counter family (§12)
             fused = ids_tiled is None
@@ -196,7 +198,8 @@ class VmapStages(StageImpl):
     def _fused2_kw(spec):
         bf = spec.bucket_fn
         return dict(shift=bf.shift, split=spec.digit_split, bits=bf.bits,
-                    num_segments=spec.segments or 1, family=spec.family)
+                    num_segments=spec.segments or 1, family=spec.family,
+                    sub_bits=spec.sub_bits)
 
     def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
         m = spec.num_buckets
@@ -345,6 +348,11 @@ class Backend:
     the kernel families (DESIGN.md §12) the backend's stages implement;
     :func:`~repro.core.pipeline.tiles.resolve_kernel_family` validates
     explicit requests against it and auto-resolves within it.
+    ``tunable_axes`` names the knobs the self-tuning layer (DESIGN.md §14)
+    may search for this backend: ``"tile"`` / ``"family"`` / ``"sub_bits"``
+    (the fused-pair in-tile stage width) / ``"fusion"`` (the vmap
+    materialize-vs-fuse label choice — kernel backends always fuse, so it
+    is not an axis there). The untiled oracle has none.
     """
 
     name: str
@@ -357,6 +365,7 @@ class Backend:
     fuses_digits: bool = False
     key_itemsize: Optional[int] = None
     families: Tuple[str, ...] = ("onehot",)
+    tunable_axes: Tuple[str, ...] = ()
 
     def check_keys(self, keys: Array) -> None:
         if self.key_itemsize is not None and keys.dtype.itemsize != self.key_itemsize:
@@ -406,6 +415,7 @@ register_backend(Backend(
     fuses_labels=True,
     fuses_digits=True,
     families=("onehot", "packed"),
+    tunable_axes=("tile", "family", "fusion", "sub_bits"),
 ))
 register_backend(Backend(
     name="pallas-interpret",
@@ -417,6 +427,7 @@ register_backend(Backend(
     fuses_digits=True,
     key_itemsize=4,
     families=("onehot", "packed"),
+    tunable_axes=("tile", "family", "sub_bits"),
 ))
 register_backend(Backend(
     name="pallas",
@@ -428,6 +439,7 @@ register_backend(Backend(
     fuses_digits=True,
     key_itemsize=4,
     families=("onehot", "packed"),
+    tunable_axes=("tile", "family", "sub_bits"),
 ))
 
 # Compatibility tuple: the registered names, reference first (PR-1 order).

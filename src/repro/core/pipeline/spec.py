@@ -32,7 +32,11 @@ from repro.core.identifiers import BitfieldSpec, BucketSpec, as_spec
 from repro.core.pipeline import stages as _st
 from repro.core.pipeline.registry import get_backend
 from repro.core.pipeline.stages import MultisplitResult
-from repro.core.pipeline.tiles import resolve_kernel_family, resolve_tile
+from repro.core.pipeline.tiles import (
+    resolve_kernel_family,
+    resolve_sub_bits,
+    resolve_tile,
+)
 
 Array = jnp.ndarray
 
@@ -129,6 +133,10 @@ class PipelineSpec:
     mode: str = "reorder"
     family: str = "onehot"
     digit_split: Optional[int] = None              # fused pair low-digit width
+    # In-tile sub-digit stage width of the fused-pair LSD sweep (DESIGN.md
+    # §13/§14): None = the measured global default (_FUSED2_SUB_BITS); an
+    # autotuned per-shape width otherwise. Always None on digits=1 plans.
+    sub_bits: Optional[int] = None
 
     # -- resolved properties ----------------------------------------------
     @property
@@ -192,19 +200,34 @@ class PipelineSpec:
                 ))
             elif be.uses_kernels:
                 hit = (True, "kernel backend: labels are computed in-register")
-            elif self.m_eff >= VMAP_FUSION_MAX_BUCKETS:
-                hit = (False, (
-                    f"m_eff={self.m_eff} >= {VMAP_FUSION_MAX_BUCKETS}: vmap "
-                    f"stages re-evaluate the spec per stage, measured slower "
-                    f"than one materialized label pass at this width "
-                    f"(0.95-0.97x at m=512)"
-                ))
             else:
-                hit = (True, (
-                    f"m_eff={self.m_eff} < {VMAP_FUSION_MAX_BUCKETS}: in-stage "
-                    f"labels beat the n-sized label round trip at this width "
-                    f"(measured 1.03-1.06x up to m=256)"
-                ))
+                # the only MEASURED branch: when autotuning is armed
+                # (DESIGN.md §14), time materialize-vs-fuse for this shape
+                # instead of trusting the VMAP_FUSION_MAX_BUCKETS heuristic
+                from repro.core.pipeline import autotune as _at
+
+                traced = isinstance(keys, jax.core.Tracer)
+                if not traced:
+                    hit = _at.maybe_tune_fusion(self)    # pins on success
+                if hit is None:
+                    fuse = self.m_eff < VMAP_FUSION_MAX_BUCKETS
+                    if _at.armed() and (traced or _at._IN_SEARCH):
+                        # armed but under a trace (timing impossible here) or
+                        # inside another axis's timing search (pinning the
+                        # heuristic now would block measuring this shape
+                        # later): use it WITHOUT caching — a later eager
+                        # call can still measure this shape
+                        return fuse
+                    hit = (True, (
+                        f"m_eff={self.m_eff} < {VMAP_FUSION_MAX_BUCKETS}: "
+                        f"in-stage labels beat the n-sized label round trip "
+                        f"at this width (measured 1.03-1.06x up to m=256)"
+                    )) if fuse else (False, (
+                        f"m_eff={self.m_eff} >= {VMAP_FUSION_MAX_BUCKETS}: "
+                        f"vmap stages re-evaluate the spec per stage, "
+                        f"measured slower than one materialized label pass "
+                        f"at this width (0.95-0.97x at m=512)"
+                    ))
             _FUSION_CACHE[key] = hit
         return hit[0]
 
@@ -720,6 +743,7 @@ def make_plan(
     mode: str = "reorder",
     family: Optional[str] = None,
     digit_split: Optional[int] = None,
+    sub_bits: Optional[int] = None,
 ) -> MultisplitPlan:
     """Resolve (n, m, method, key-value-ness, backend, mode) into a staged
     plan.
@@ -744,16 +768,24 @@ def make_plan(
     # the fused-pair local solves are digit_split-wide, not m-wide: family
     # (and tile VMEM cost) follow the STAGE width, the scan width stays m_eff
     fam_m = m_eff if digit_split is None else (1 << digit_split) * (segments or 1)
-    resolved_family = resolve_kernel_family(n, fam_m, method, backend, family)
+    resolved_family = resolve_kernel_family(
+        n, fam_m, method, backend, family, digits=digits, key_value=key_value,
+        pair_m=None if digit_split is None else m_eff,
+    )
     resolved_tile = resolve_tile(
         n, m_eff, method, key_value, backend, tile, family=resolved_family,
         digits=digits, stage_m=None if digit_split is None else fam_m,
     )
+    resolved_sub = None
+    if digit_split is not None:
+        resolved_sub = resolve_sub_bits(
+            n, m_eff, method, key_value, backend, fam_m, requested=sub_bits
+        )
     return MultisplitPlan(
         n=n, num_buckets=num_buckets, method=method, key_value=key_value,
         backend=backend, tile=resolved_tile, bucket_fn=bucket_fn,
         batch=batch, segments=segments, mode=mode, family=resolved_family,
-        digit_split=digit_split,
+        digit_split=digit_split, sub_bits=resolved_sub,
     )
 
 
@@ -771,16 +803,20 @@ def make_radix_plan(
     mode: str = "reorder",
     family: Optional[str] = None,
     digit_split: Optional[int] = None,
+    sub_bits: Optional[int] = None,
 ) -> MultisplitPlan:
     """A plan whose bucket spec is the radix digit
     :class:`~repro.core.identifiers.BitfieldSpec`(shift, bits) — label-fused
     into the tile stage on fusing backends (in-register in the kernels; no
     label array anywhere).  ``digit_split=r`` marks ``bits`` as a fused
-    TWO-digit pair (low digit ``r`` bits wide, DESIGN.md §13)."""
+    TWO-digit pair (low digit ``r`` bits wide, DESIGN.md §13); ``sub_bits``
+    pins the pair's in-tile sub-digit stage width (None auto-resolves it,
+    DESIGN.md §14)."""
     return make_plan(
         n, 1 << bits, method=method, key_value=key_value, backend=backend,
         tile=tile, bucket_fn=BitfieldSpec(shift, bits), batch=batch,
         segments=segments, mode=mode, family=family, digit_split=digit_split,
+        sub_bits=sub_bits,
     )
 
 

@@ -166,7 +166,7 @@ def fused2_tile_postscan(
     keys: Array, g_row: Array, vals: Optional[Array],
     shift: int, split: int, bits: int,
     seg: Optional[Array] = None, num_segments: int = 1,
-    family: str = "onehot",
+    family: str = "onehot", sub_bits: Optional[int] = None,
 ):
     """Per-tile fused two-digit postscan+reorder: digit-``d`` solve, stable
     in-tile reorder, digit-``d+1`` solve on the reordered tile; returns the
@@ -175,7 +175,7 @@ def fused2_tile_postscan(
 
     return fused2_postscan_body(
         keys, g_row, vals, shift, split, bits,
-        seg=seg, num_segments=num_segments, family=family,
+        seg=seg, num_segments=num_segments, family=family, sub_bits=sub_bits,
     )
 
 

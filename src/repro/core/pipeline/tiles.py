@@ -16,6 +16,15 @@ so EVERY consumer — flat, batched, segmented plans and the chained radix
 pipeline — resolves (tile, family) through the same door.  Family decisions
 are memoized WITH the reason they were made (:func:`family_decision`), so a
 surprising plan can always be interrogated.
+
+Since the self-tuning layer (DESIGN.md §14,
+:mod:`repro.core.pipeline.autotune`) a cache MISS can resolve through
+measurement instead of the heuristic: when autotuning is opted in
+(``repro.ops.set_autotune(True)`` / ``REPRO_AUTOTUNE=1``), the miss first
+consults a persistent on-disk cache keyed by (host fingerprint, backend,
+shape class) and otherwise runs the joint timing search, pinning AND
+persisting the winner.  The heuristics remain the default — and the drift
+gate (``benchmarks/autotune_drift.py``) measures how far they rot.
 """
 
 from __future__ import annotations
@@ -47,10 +56,35 @@ _MIN_TILE = 256
 FAMILIES = ("onehot", "packed")
 PACKED_MIN_BUCKETS = 8
 
-_TILE_CACHE: Dict[Tuple[int, int, str, bool, str], int] = {}
-# (n, m_eff, method, backend) -> (family, reason). Reasons are recorded so
-# autotune/heuristic choices stay explainable after the fact.
-_FAMILY_CACHE: Dict[Tuple[int, int, str, str], Tuple[str, str]] = {}
+# digits=1: (n, m_eff, method, key_value, backend);
+# digits=2: (n, m_eff, method, key_value, backend, 2, stage_m) — stage_m IS
+# part of the fused-pair footprint (_fused2_cost_bytes depends on it), so
+# two pair schedules with equal combined m but different digit_split must
+# not share a tile entry (regression-tested).
+_TILE_CACHE: Dict[Tuple, int] = {}
+# digits=1: (n, m_eff, method, backend); digits=2 appends the digits slot —
+# fused-pair stage solves are stage_m-wide, and their decisions must never
+# collide with genuine digits=1 plans of m == stage_m (regression-tested).
+# Values are (family, reason): reasons are recorded so autotune/heuristic
+# choices stay explainable after the fact.
+_FAMILY_CACHE: Dict[Tuple, Tuple[str, str]] = {}
+# (n, m_eff, method, key_value, backend, stage_m) -> in-tile sub-digit stage
+# width of the fused2 LSD sweep. ONLY the autotuner writes here; on a miss
+# the measured global default (_FUSED2_SUB_BITS) applies.
+_SUB_BITS_CACHE: Dict[Tuple, int] = {}
+
+
+def _family_key(n: int, m: int, method: str, backend: str, digits: int) -> Tuple:
+    base = (n, m, method, backend)
+    return base if digits == 1 else base + (digits,)
+
+
+def _tile_key(n: int, m: int, method: str, key_value: bool, backend: str,
+              digits: int, stage_m: Optional[int]) -> Tuple:
+    base = (n, m, method, key_value, backend)
+    if digits == 1:
+        return base
+    return base + (digits, stage_m or max(1, int(m ** 0.5)))
 
 
 def _family_cost_bytes(t: int, m: int, family: str) -> int:
@@ -138,10 +172,17 @@ def _heuristic_family(n: int, m: int, method: str, backend: str) -> Tuple[str, s
 
 
 def resolve_kernel_family(
-    n: int, m: int, method: str, backend: str, requested: Optional[str] = None
+    n: int, m: int, method: str, backend: str, requested: Optional[str] = None,
+    digits: int = 1, key_value: bool = False, pair_m: Optional[int] = None,
 ) -> str:
     """Kernel family for one subproblem shape; cached per shape WITH the
     reason it was chosen (:func:`family_decision`), overridable.
+
+    ``digits=2`` keys the decision separately (fused-pair stage solves are
+    ``stage_m``-wide; ``m`` here IS the stage width) so autotuning a flat
+    shape never re-families a fused-pair plan of ``m == stage_m`` or vice
+    versa.  ``key_value``/``pair_m`` are HINTS for the autotune-on-miss
+    layer (what to measure), never part of the cache key.
 
     An explicit ``requested`` family is validated against the backend's
     ``families`` capability and returned verbatim — and, like an explicit
@@ -161,20 +202,30 @@ def resolve_kernel_family(
                 f"not {requested!r}"
             )
         return requested
-    key = (n, m, method, backend)
+    key = _family_key(n, m, method, backend, digits)
     hit = _FAMILY_CACHE.get(key)
+    if hit is None:
+        from repro.core.pipeline import autotune as _at
+
+        _at.maybe_tune_family(
+            n, m, method, backend, digits=digits, key_value=key_value,
+            pair_m=pair_m,
+        )
+        hit = _FAMILY_CACHE.get(key)          # the search pins on success
     if hit is None:
         hit = _heuristic_family(n, m, method, backend)
         _FAMILY_CACHE[key] = hit
     return hit[0]
 
 
-def family_decision(n: int, m: int, method: str, backend: str) -> Tuple[str, str]:
+def family_decision(
+    n: int, m: int, method: str, backend: str, digits: int = 1
+) -> Tuple[str, str]:
     """(family, reason) for one shape — resolving (and memoizing) it first
     if needed. The reason says whether the heuristic or the autotuner chose,
     and why."""
-    resolve_kernel_family(n, m, method, backend)
-    return _FAMILY_CACHE[(n, m, method, backend)]
+    resolve_kernel_family(n, m, method, backend, digits=digits)
+    return _FAMILY_CACHE[_family_key(n, m, method, backend, digits)]
 
 
 def family_decisions() -> Dict[Tuple[int, int, str, str], Tuple[str, str]]:
@@ -216,26 +267,73 @@ def resolve_tile(
         return requested
     kw = dict(digits=digits, stage_m=stage_m, key_value=key_value)
     fam_m = m if digits == 1 else (stage_m or max(1, int(m ** 0.5)))
-    auto_family = resolve_kernel_family(n, fam_m, method, backend)
+    auto_family = resolve_kernel_family(
+        n, fam_m, method, backend, digits=digits, key_value=key_value,
+        pair_m=None if digits == 1 else m,
+    )
     fam = auto_family if family is None else family
     if fam != auto_family:
         return _heuristic_tile(n, m, method, backend, family=fam, **kw)
-    key = ((n, m, method, key_value, backend) if digits == 1
-           else (n, m, method, key_value, backend, digits))
+    key = _tile_key(n, m, method, key_value, backend, digits, stage_m)
     tile = _TILE_CACHE.get(key)
+    if tile is None:
+        from repro.core.pipeline import autotune as _at
+
+        _at.maybe_tune_tile(
+            n, m, method, key_value, backend, digits=digits, stage_m=stage_m,
+            family=fam,
+        )
+        tile = _TILE_CACHE.get(key)           # the search pins on success
     if tile is None:
         tile = _heuristic_tile(n, m, method, backend, family=fam, **kw)
         _TILE_CACHE[key] = tile
     return tile
 
 
-def clear_tile_cache() -> None:
-    """Drop every memoized tile, family AND label-fusion decision."""
+def resolve_sub_bits(
+    n: int,
+    m: int,
+    method: str,
+    key_value: bool,
+    backend: str,
+    stage_m: int,
+    requested: Optional[int] = None,
+) -> Optional[int]:
+    """In-tile sub-digit stage width for a fused-pair plan (DESIGN.md §13):
+    the autotuned per-shape width if one was measured (or persisted on
+    disk), else ``None`` — the kernels then fall back to the measured
+    global default ``_FUSED2_SUB_BITS``. ``m`` is the pair's combined scan
+    width (``m_eff``); ``stage_m`` the stage-solve width."""
+    if requested is not None:
+        return requested
+    key = (n, m, method, key_value, backend, stage_m)
+    hit = _SUB_BITS_CACHE.get(key)
+    if hit is None:
+        from repro.core.pipeline import autotune as _at
+
+        _at.maybe_tune_sub_bits(n, m, method, key_value, backend, stage_m)
+        hit = _SUB_BITS_CACHE.get(key)
+    return hit
+
+
+def clear_tile_cache(disk: bool = False) -> None:
+    """Drop every memoized tile, family, sub-bits AND label-fusion decision.
+
+    Also drops the lazily-loaded snapshot of the persistent autotune cache,
+    so the next miss re-reads the file — i.e. a plain ``clear_tile_cache()``
+    simulates a fresh process against a warm cache file.  ``disk=True``
+    additionally deletes the on-disk layer itself."""
+    from repro.core.pipeline import autotune as _at
     from repro.core.pipeline import spec as _spec
 
     _TILE_CACHE.clear()
     _FAMILY_CACHE.clear()
+    _SUB_BITS_CACHE.clear()
     _spec._FUSION_CACHE.clear()
+    if disk:
+        _at.clear_disk()
+    else:
+        _at.drop_loaded()
 
 
 def autotune_tile(
@@ -249,25 +347,40 @@ def autotune_tile(
     families: Optional[Tuple[str, ...]] = None,
     trials: int = 3,
     seed: int = 0,
+    segments: Optional[int] = None,
+    batch: Optional[int] = None,
 ) -> int:
     """Time the candidate (tile, family) grid on synthetic uniform keys and
     pin BOTH winners in the per-shape caches (the family with an
-    ``autotuned`` reason naming the measured best). Returns the chosen
-    tile; read the family via :func:`family_decision`."""
+    ``autotuned`` reason naming the measured best), persisting them through
+    the autotune disk layer when it is active (DESIGN.md §14). Returns the
+    chosen tile; read the family via :func:`family_decision`.
+
+    ``segments=s`` / ``batch=b`` (mutually exclusive) measure the segmented
+    or batched layout instead of the flat one — the segmented search pins
+    the ``m_eff = s·m`` shape class its plans actually resolve through; the
+    batched search times ``b`` rows over the same per-row shape class."""
     import numpy as np
 
+    from repro.core.pipeline import autotune as _at
     from repro.core.pipeline.registry import get_backend
     from repro.core.pipeline.spec import make_plan
 
     be = get_backend(backend)
     if families is None:
         families = be.families if be.tiled else ("onehot",)
+    m_eff = bucket_fn.num_buckets * (segments or 1)
     for fam in families:
-        resolve_kernel_family(n, bucket_fn.num_buckets, method, backend, fam)
+        resolve_kernel_family(n, m_eff, method, backend, fam)
 
     rng = np.random.RandomState(seed)
-    keys = jnp.asarray(rng.randint(0, 2**30, n, dtype=np.uint32))
-    values = jnp.arange(n, dtype=jnp.int32) if key_value else None
+    shape = (n,) if batch is None else (batch, n)
+    keys = jnp.asarray(rng.randint(0, 2**30, shape, dtype=np.uint32))
+    values = (jnp.arange(keys.size, dtype=jnp.int32).reshape(shape)
+              if key_value else None)
+    seg_starts = None
+    if segments is not None:
+        seg_starts = (jnp.arange(segments, dtype=jnp.int32) * n) // segments
     best, best_t, best_f = None, None, None
     for tile in candidates:
         if tile > max(n, _MIN_TILE):
@@ -276,10 +389,15 @@ def autotune_tile(
             plan = make_plan(
                 n, bucket_fn.num_buckets, method=method, key_value=key_value,
                 backend=backend, tile=tile, bucket_fn=bucket_fn, family=fam,
+                segments=segments, batch=batch,
             )
-            run = jax.jit(lambda k, v: plan(k, v).keys) if key_value else jax.jit(
-                lambda k: plan(k).keys
-            )
+            if segments is not None:
+                run = (jax.jit(lambda k, v, p=plan: p(k, v, segment_starts=seg_starts).keys)
+                       if key_value else
+                       jax.jit(lambda k, p=plan: p(k, segment_starts=seg_starts).keys))
+            else:
+                run = (jax.jit(lambda k, v, p=plan: p(k, v).keys) if key_value
+                       else jax.jit(lambda k, p=plan: p(k).keys))
             args = (keys, values) if key_value else (keys,)
             jax.block_until_ready(run(*args))                # compile
             ts = []
@@ -291,19 +409,21 @@ def autotune_tile(
             if best is None or t < best:
                 best, best_t, best_f = t, tile, fam
     if best_t is not None:
-        _TILE_CACHE[(n, bucket_fn.num_buckets, method, key_value, backend)] = best_t
+        tkey = (n, m_eff, method, key_value, backend)
+        _TILE_CACHE[tkey] = best_t
         # The family decision is shared by both key-value variants of the
         # shape, but only THIS variant's tile was measured under the new
         # family — drop the other variant's entry so it re-resolves under
         # the pinned family's cost model instead of keeping a tile sized
         # for the old one (regression-tested).
-        _TILE_CACHE.pop(
-            (n, bucket_fn.num_buckets, method, not key_value, backend), None
-        )
-        _FAMILY_CACHE[(n, bucket_fn.num_buckets, method, backend)] = (best_f, (
+        _TILE_CACHE.pop((n, m_eff, method, not key_value, backend), None)
+        fkey = (n, m_eff, method, backend)
+        _FAMILY_CACHE[fkey] = (best_f, (
             f"autotuned over tiles={candidates} x families={tuple(families)}: "
             f"({best_t}, {best_f!r}) won at {best:.3e}s"
         ))
+        _at.record("tile", tkey, best_t)
+        _at.record("family", fkey, best_f)
     return best_t if best_t is not None else resolve_tile(
-        n, bucket_fn.num_buckets, method, key_value, backend
+        n, bucket_fn.num_buckets * (segments or 1), method, key_value, backend
     )

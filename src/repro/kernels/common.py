@@ -383,6 +383,7 @@ def fused2_postscan_body(
     seg: Optional[Array] = None,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
 ):
     """THE fused two-digit postscan+reorder: same contract as
     :func:`fused_postscan_body` / :func:`packed_postscan_body` —
@@ -404,6 +405,10 @@ def fused2_postscan_body(
     """
     t = keys.shape[0]
     del split  # decomposition is sub-digit-wide; result is split-invariant
+    # per-shape autotuned stage width (DESIGN.md §14), else the measured
+    # global default — the RESULT is sub_bits-invariant (LSD identity),
+    # only the stage count / plane width trade-off moves
+    sb = sub_bits or _FUSED2_SUB_BITS
     m2 = 1 << bits
     idx = jnp.arange(t, dtype=jnp.int32)
     keys2, idx2 = keys, idx
@@ -418,8 +423,8 @@ def fused2_postscan_body(
     # ---- in-VMEM LSD sweep: sub-digit stages LSB→MSB across the pair bits;
     # values/segments are never scattered per stage — idx2 tracks the source
     # slot, so they are gathered once at the end.
-    for off in range(0, bits, _FUSED2_SUB_BITS):
-        b = min(_FUSED2_SUB_BITS, bits - off)
+    for off in range(0, bits, sb):
+        b = min(sb, bits - off)
         m = 1 << b
         d = ((keys2.astype(jnp.uint32) >> jnp.uint32(shift + off))
              & jnp.uint32(m - 1)).astype(jnp.int32)
@@ -451,19 +456,21 @@ def fused2_positions_body(
     seg: Optional[Array] = None,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
 ) -> Array:
     """Fused2 DMS postscan: global pair destinations in element order —
     the ``gpos`` byproduct of the full body (the in-VMEM reorder is still
     how the combined rank is derived)."""
     return fused2_postscan_body(
         keys, g_row, None, shift, split, bits, seg=seg,
-        num_segments=num_segments, family=family,
+        num_segments=num_segments, family=family, sub_bits=sub_bits,
     )[3]
 
 
 def fused2_vmem_bytes(
     tile: int, m_lo: int, num_segments: int = 1, family: str = "onehot",
     key_value: bool = False, m_hi: Optional[int] = None,
+    sub_bits: Optional[int] = None,
 ) -> int:
     """Working-set model of the DOUBLE-RESIDENT fused2 tile, in bytes: ONE
     sub-digit-wide stage solve plane (reused across the LSD sweep's stages —
@@ -477,7 +484,8 @@ def fused2_vmem_bytes(
     so the pair only profits when L is small)."""
     m_hi = m_lo if m_hi is None else m_hi
     m2 = m_lo * m_hi
-    stage_w = max(min(1 << _FUSED2_SUB_BITS, max(m_lo, m_hi)), num_segments)
+    stage_w = max(min(1 << (sub_bits or _FUSED2_SUB_BITS), max(m_lo, m_hi)),
+                  num_segments)
     if family == "packed":
         lay = packed_layout(tile, stage_w)
         solve = 4 * (2 * tile * lay.w + 3 * lay.n_sub * stage_w)

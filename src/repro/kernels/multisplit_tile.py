@@ -853,7 +853,8 @@ def fused2_tile_histograms_pallas(
 
 
 def _fused2_positions_kernel(*refs, shift: int, split: int, bits: int,
-                             num_segments: int, family: str, has_seg: bool):
+                             num_segments: int, family: str,
+                             sub_bits: Optional[int], has_seg: bool):
     if has_seg:
         keys_ref, seg_ref, g_ref, pos_ref = refs
     else:
@@ -861,7 +862,7 @@ def _fused2_positions_kernel(*refs, shift: int, split: int, bits: int,
     pos_ref[0, :] = fused2_positions_body(
         keys_ref[0, :], g_ref[0, :], shift, split, bits,
         seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
-        family=family,
+        family=family, sub_bits=sub_bits,
     )
 
 
@@ -874,6 +875,7 @@ def fused2_tile_positions_pallas(
     seg_tiled: Optional[Array] = None,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
     interpret: bool = True,
 ) -> Array:
     """Fused2 DMS postscan: (L, T) keys + (L, s·m²) pair bases -> (L, T)
@@ -890,7 +892,7 @@ def fused2_tile_positions_pallas(
         functools.partial(
             _fused2_positions_kernel, shift=spec.shift, split=split,
             bits=spec.bits, num_segments=num_segments, family=family,
-            has_seg=has_seg,
+            sub_bits=sub_bits, has_seg=has_seg,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,
@@ -901,7 +903,8 @@ def fused2_tile_positions_pallas(
 
 
 def _fused2_fused_kernel(*refs, shift: int, split: int, bits: int,
-                         num_segments: int, family: str, has_seg: bool,
+                         num_segments: int, family: str,
+                         sub_bits: Optional[int], has_seg: bool,
                          has_values: bool):
     refs = list(refs)
     keys_ref = refs.pop(0)
@@ -917,7 +920,7 @@ def _fused2_fused_kernel(*refs, shift: int, split: int, bits: int,
         keys_ref[0, :], g_ref[0, :],
         vals_ref[0, :] if has_values else None, shift, split, bits,
         seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
-        family=family,
+        family=family, sub_bits=sub_bits,
     )
     keys_out_ref[0, :] = keys_r
     pos_out_ref[0, :] = pos_r
@@ -936,6 +939,7 @@ def fused2_fused_postscan_reorder_pallas(
     seg_tiled: Optional[Array] = None,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """THE fused two-digit postscan+reorder: output contract of
@@ -964,7 +968,7 @@ def fused2_fused_postscan_reorder_pallas(
         functools.partial(
             _fused2_fused_kernel, shift=spec.shift, split=split,
             bits=spec.bits, num_segments=num_segments, family=family,
-            has_seg=has_seg, has_values=has_values,
+            sub_bits=sub_bits, has_seg=has_seg, has_values=has_values,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,

@@ -238,7 +238,7 @@ def fused2_tile_histograms(
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "spec", "split", "num_segments", "family", "interpret"))
+    "spec", "split", "num_segments", "family", "sub_bits", "interpret"))
 def fused2_tile_positions(
     keys_tiled: Array,
     g: Array,
@@ -248,17 +248,19 @@ def fused2_tile_positions(
     split: int,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
     interpret: bool = True,
 ) -> Array:
     """THE fused2 DMS postscan entry point (see multisplit_tile)."""
     return _mst.fused2_tile_positions_pallas(
         keys_tiled, g, spec, split, seg_tiled=seg_tiled,
-        num_segments=num_segments, family=family, interpret=interpret,
+        num_segments=num_segments, family=family, sub_bits=sub_bits,
+        interpret=interpret,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "spec", "split", "num_segments", "family", "interpret"))
+    "spec", "split", "num_segments", "family", "sub_bits", "interpret"))
 def fused2_fused_postscan_reorder(
     keys_tiled: Array,
     g: Array,
@@ -269,13 +271,14 @@ def fused2_fused_postscan_reorder(
     split: int,
     num_segments: int = 1,
     family: str = "onehot",
+    sub_bits: Optional[int] = None,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """THE fused two-digit postscan+reorder entry point (see multisplit_tile)."""
     return _mst.fused2_fused_postscan_reorder_pallas(
         keys_tiled, g, values_tiled, spec=spec, split=split,
         seg_tiled=seg_tiled, num_segments=num_segments, family=family,
-        interpret=interpret,
+        sub_bits=sub_bits, interpret=interpret,
     )
 
 

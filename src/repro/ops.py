@@ -60,6 +60,7 @@ from repro.core.pipeline import (
     make_batched_plan,
     make_plan,
     make_segmented_plan,
+    set_autotune,
 )
 from repro.core.sort import radix_sort, segmented_radix_sort
 
@@ -76,6 +77,8 @@ __all__ = [
     # operators
     "multisplit", "multisplit_key_value", "segmented_multisplit",
     "histogram", "radix_sort", "segmented_radix_sort",
+    # tuning
+    "set_autotune",
 ]
 
 

@@ -17,6 +17,7 @@ EXPECTED_ALL = (
     "MultisplitResult",
     "multisplit", "multisplit_key_value", "segmented_multisplit",
     "histogram", "radix_sort", "segmented_radix_sort",
+    "set_autotune",
 )
 
 EXPECTED_SIGNATURES = {
@@ -53,6 +54,11 @@ EXPECTED_SIGNATURES = {
     "range_buckets": "(splitters)",
     "even_buckets": "(lo, hi, num_buckets)",
     "from_fn": "(fn, num_buckets, name='user')",
+    # ISSUE 7 additively appended the self-tuning opt-in (DESIGN.md §14).
+    "set_autotune": (
+        "(enabled=None, *, cache_dir=None, persist=None, trials=None, "
+        "candidates=None)"
+    ),
 }
 
 

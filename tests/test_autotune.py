@@ -1,0 +1,342 @@
+"""Self-tuning layer (ISSUE 7, DESIGN.md §14): autotune-on-first-miss, the
+persistent on-disk cache (round-trip, corruption, invalidation), the
+fused-pair (tile, family, sub_bits) joint search, the measured label-fusion
+choice — and the cache-key regression tests (the digits slot that keeps
+fused-pair family decisions off digits=1 plans, the stage_m slot that keeps
+pair schedules with equal combined m apart)."""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.identifiers import EvenSpec
+from repro.core.pipeline import (
+    clear_tile_cache,
+    family_decision,
+    fusion_decision,
+    make_plan,
+    make_radix_plan,
+    resolve_kernel_family,
+    resolve_tile,
+    set_autotune,
+)
+from repro.core.pipeline import autotune as at
+from repro.core.pipeline import tiles
+
+N = 4096
+M = 32
+
+
+def _spec(m=M):
+    return EvenSpec(0.0, float(1 << 20), m)
+
+
+def _keys(n=N, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, 1 << 20, n, dtype=np.uint32))
+
+
+@pytest.fixture
+def armed(tmp_path):
+    """Arm autotuning against a throwaway disk cache; restore after."""
+    prev = at._CONFIG
+    set_autotune(True, cache_dir=str(tmp_path), trials=1,
+                 candidates=(256, 1024))
+    clear_tile_cache()
+    yield tmp_path / "multisplit_autotune.json"
+    at._CONFIG = prev
+    at._LOADED = None
+    clear_tile_cache()
+
+
+def _disk(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _disk_kinds(path):
+    return sorted({k.split("|")[1] for k in _disk(path)["entries"]})
+
+
+# ---------------------------------------------------------------------------
+# Disarmed default: the layer is inert
+# ---------------------------------------------------------------------------
+
+def test_disarmed_by_default_no_search_runs(monkeypatch):
+    clear_tile_cache()
+
+    def boom(*a, **kw):                              # pragma: no cover
+        raise AssertionError("search ran while autotune is off")
+
+    monkeypatch.setattr(tiles, "autotune_tile", boom)
+    monkeypatch.setattr(at, "autotune_fused2", boom)
+    monkeypatch.setattr(at, "autotune_label_fusion", boom)
+    p = make_plan(N, M, bucket_fn=_spec())
+    r = p(_keys())
+    assert int(r.bucket_counts.sum()) == N
+    fam, reason = family_decision(N, M, "bms", "vmap")
+    assert "autotuned" not in reason
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: miss -> joint search -> pin + persist -> warm-disk rehydrate
+# ---------------------------------------------------------------------------
+
+def test_miss_runs_joint_search_and_persists(armed):
+    p = make_plan(N, M, bucket_fn=_spec())
+    fam, reason = family_decision(N, M, "bms", "vmap")
+    assert "autotuned" in reason
+    assert p.tile in (256, 1024)                     # a measured candidate
+    data = _disk(armed)
+    assert data["version"] == at.SCHEMA_VERSION
+    assert {"family", "tile"} <= set(_disk_kinds(armed))
+    # the disk key embeds the in-memory cache key verbatim
+    fp = at.host_fingerprint()
+    assert f"{fp}|tile|{N}|{M}|bms|False|vmap" in data["entries"]
+
+
+def test_fresh_process_warm_disk_resolves_without_timing(armed, monkeypatch):
+    p = make_plan(N, M, bucket_fn=_spec())
+    tuned_tile = p.tile
+    tuned_fam = p.family
+
+    # simulate a fresh process against the warm cache file
+    clear_tile_cache()
+    calls = {"n": 0}
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        raise AssertionError("timing search ran despite a warm disk cache")
+
+    monkeypatch.setattr(tiles, "autotune_tile", counting)
+    monkeypatch.setattr(at, "autotune_fused2", counting)
+    p2 = make_plan(N, M, bucket_fn=_spec())
+    assert calls["n"] == 0
+    assert (p2.tile, p2.family) == (tuned_tile, tuned_fam)
+    assert family_decision(N, M, "bms", "vmap")[1] == at._DISK_REASON
+
+
+def test_corrupt_cache_file_falls_back_to_heuristic(armed):
+    armed.write_text("{ not json !!")
+    clear_tile_cache()
+    # a corrupt file loads as empty: the miss re-searches (trials=1) and
+    # REWRITES a valid file rather than erroring
+    p = make_plan(N, M, bucket_fn=_spec())
+    assert int(p(_keys()).bucket_counts.sum()) == N
+    assert _disk(armed)["version"] == at.SCHEMA_VERSION
+
+
+def test_stale_schema_version_is_ignored(armed):
+    armed.parent.mkdir(parents=True, exist_ok=True)
+    fp = at.host_fingerprint()
+    armed.write_text(json.dumps({
+        "version": at.SCHEMA_VERSION + 1,
+        "entries": {f"{fp}|tile|{N}|{M}|bms|False|vmap": 64},
+    }))
+    clear_tile_cache()
+    set_autotune(persist=True)
+    assert at.lookup("tile", (N, M, "bms", False, "vmap")) is None
+
+
+def test_clear_tile_cache_disk_deletes_the_file(armed):
+    make_plan(N, M, bucket_fn=_spec())
+    assert armed.exists()
+    clear_tile_cache(disk=True)
+    assert not armed.exists()
+    assert at._entries() == {}
+
+
+def test_unwritable_cache_dir_degrades_to_memory_only(armed):
+    set_autotune(cache_dir="/proc/definitely/not/writable")
+    p = make_plan(N, M, bucket_fn=_spec())             # must not raise
+    assert family_decision(N, M, "bms", "vmap")[1].startswith("autotuned")
+    assert p.tile in (256, 1024)
+
+
+def test_set_autotune_snapshot_and_env_arming(monkeypatch):
+    cfg = set_autotune()                               # no-op: current state
+    assert cfg == at._CONFIG
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    assert at._env_enabled()
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert not at._env_enabled()
+    status = at.autotune_status()
+    assert {"config", "cache_path", "disk_entries", "fingerprint"} <= set(status)
+
+
+# ---------------------------------------------------------------------------
+# S2 regression: the fused-pair tile key carries stage_m
+# ---------------------------------------------------------------------------
+
+def test_fused_tile_key_includes_stage_m():
+    k1 = tiles._tile_key(N, 256, "bms", False, "vmap", 2, 16)
+    k2 = tiles._tile_key(N, 256, "bms", False, "vmap", 2, 4)
+    assert k1 != k2
+    # digits=1 keeps the pre-ISSUE-7 5-tuple shape (pinned by older tests)
+    assert tiles._tile_key(N, 256, "bms", False, "vmap", 1, None) == (
+        N, 256, "bms", False, "vmap"
+    )
+
+
+def test_pair_schedules_same_m_different_stage_m_get_own_tiles():
+    clear_tile_cache()
+    # two pair schedules with EQUAL combined m=256: 4+4 bits vs 2+6 bits
+    t_44 = resolve_tile(1 << 16, 256, "bms", False, "vmap",
+                        digits=2, stage_m=16)
+    t_26 = resolve_tile(1 << 16, 256, "bms", False, "vmap",
+                        digits=2, stage_m=4)
+    keys = [k for k in tiles._TILE_CACHE if len(k) == 7]
+    assert len(keys) == 2, keys
+    assert {k[-1] for k in keys} == {16, 4}
+    # both resolve independently afterwards (no cross-contamination)
+    assert resolve_tile(1 << 16, 256, "bms", False, "vmap",
+                        digits=2, stage_m=16) == t_44
+    assert resolve_tile(1 << 16, 256, "bms", False, "vmap",
+                        digits=2, stage_m=4) == t_26
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# S3 regression: fused-pair family decisions live in their own key slot
+# ---------------------------------------------------------------------------
+
+def test_flat_family_pin_does_not_leak_into_fused_pairs():
+    clear_tile_cache()
+    # heuristic would say "packed" at m=16; pin the digits=1 slot to onehot
+    tiles._FAMILY_CACHE[(N, 16, "bms", "vmap")] = ("onehot", "test pin")
+    fam2 = resolve_kernel_family(N, 16, "bms", "vmap", digits=2, pair_m=256)
+    assert fam2 == "packed"                        # its own (heuristic) call
+    assert tiles._FAMILY_CACHE[(N, 16, "bms", "vmap", 2)][0] == "packed"
+    clear_tile_cache()
+
+
+def test_fused_pair_family_pin_does_not_leak_into_flat():
+    clear_tile_cache()
+    tiles._FAMILY_CACHE[(N, 16, "bms", "vmap", 2)] = ("onehot", "test pin")
+    fam1 = resolve_kernel_family(N, 16, "bms", "vmap")
+    assert fam1 == "packed"
+    assert tiles._FAMILY_CACHE[(N, 16, "bms", "vmap")][0] == "packed"
+    clear_tile_cache()
+
+
+def test_fused_plan_family_isolated_end_to_end():
+    clear_tile_cache()
+    # stage_m of an 8-bit 4+4 pair is 16: pin the FLAT m=16 class ...
+    tiles._FAMILY_CACHE[(N, 16, "bms", "vmap")] = ("onehot", "test pin")
+    plan = make_radix_plan(N, 0, 8, digit_split=4)
+    # ... and the fused pair still resolves through its own digits=2 slot
+    assert plan.family == "packed"
+    r = plan(_keys())
+    got = np.asarray(r.keys)
+    assert np.array_equal(np.sort(got & 0xFF), np.sort(np.asarray(_keys()) & 0xFF))
+    assert (np.diff(got & 0xFF) >= 0).all()        # sorted by the low byte
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# Fused-pair joint search: tile x family x sub_bits
+# ---------------------------------------------------------------------------
+
+def test_fused2_joint_search_pins_all_three_axes(armed):
+    out = at.autotune_fused2(
+        N, 0, 8, 4, candidates=(1024,), sub_bits_candidates=(4,), trials=1
+    )
+    assert out == (1024, out[1], 4)
+    stage_m = 16
+    assert tiles._TILE_CACHE[
+        tiles._tile_key(N, 256, "bms", False, "vmap", 2, stage_m)
+    ] == 1024
+    fam, reason = tiles._FAMILY_CACHE[(N, stage_m, "bms", "vmap", 2)]
+    assert fam == out[1] and "autotuned over fused-pair grid" in reason
+    assert tiles._SUB_BITS_CACHE[(N, 256, "bms", False, "vmap", stage_m)] == 4
+    assert {"family", "sub_bits", "tile"} <= set(_disk_kinds(armed))
+
+
+def test_radix_plan_rehydrates_fused2_axes_from_disk(armed, monkeypatch):
+    at.autotune_fused2(
+        N, 0, 8, 4, candidates=(1024,), sub_bits_candidates=(4,), trials=1
+    )
+    clear_tile_cache()                               # fresh-process simulation
+
+    def boom(*a, **kw):                              # pragma: no cover
+        raise AssertionError("fused2 search ran despite a warm disk cache")
+
+    monkeypatch.setattr(at, "autotune_fused2", boom)
+    monkeypatch.setattr(tiles, "autotune_tile", boom)
+    plan = make_radix_plan(N, 0, 8, digit_split=4)
+    assert plan.tile == 1024 and plan.sub_bits == 4
+    assert family_decision(N, 16, "bms", "vmap", digits=2)[1] == at._DISK_REASON
+
+
+def test_sub_bits_only_moves_cost_never_results():
+    clear_tile_cache()
+    k = _keys()
+    ref = None
+    for sb in (2, 4, 8):
+        r = make_radix_plan(N, 0, 8, digit_split=4, sub_bits=sb)(k)
+        got = np.asarray(r.keys)
+        if ref is None:
+            ref = got
+        np.testing.assert_array_equal(got, ref)
+    clear_tile_cache()
+
+
+# ---------------------------------------------------------------------------
+# Measured label-fusion choice (vmap generic path)
+# ---------------------------------------------------------------------------
+
+def test_label_fusion_is_measured_and_rehydrated(armed):
+    p = make_plan(N, M, bucket_fn=_spec())
+    k = _keys()
+    p.label_fusion(k)                                # eager: may measure
+    dec = fusion_decision("vmap", "EvenSpec", M)
+    assert dec is not None and "autotuned" in dec[1]
+    assert "fusion" in _disk_kinds(armed)
+
+    clear_tile_cache()                               # fresh-process simulation
+    p.label_fusion(k)
+    assert fusion_decision("vmap", "EvenSpec", M)[1] == at._DISK_REASON
+
+
+def test_traced_consult_defers_without_caching(armed):
+    import jax
+
+    p = make_plan(N, M, bucket_fn=_spec())
+    clear_tile_cache(disk=True)                      # no fusion decision yet
+
+    @jax.jit
+    def run(k):
+        return p(k).keys
+
+    run(_keys())
+    # under the trace the heuristic answered UNCACHED: the shape stays
+    # measurable by a later eager consult
+    assert fusion_decision("vmap", "EvenSpec", M) is None
+    p.label_fusion(_keys())
+    assert "autotuned" in fusion_decision("vmap", "EvenSpec", M)[1]
+
+
+# ---------------------------------------------------------------------------
+# Explicit segmented / batched searches pin their real shape classes
+# ---------------------------------------------------------------------------
+
+def test_segmented_search_pins_the_combined_shape_class(armed):
+    from repro.core.pipeline import autotune_tile
+
+    tile = autotune_tile(
+        1024, _spec(8), segments=2, candidates=(256,), trials=1
+    )
+    assert tile == 256
+    # the segmented plan resolves through m_eff = s * m = 16
+    assert tiles._TILE_CACHE[(1024, 16, "bms", False, "vmap")] == 256
+
+
+def test_batched_search_pins_the_per_row_shape_class(armed):
+    from repro.core.pipeline import autotune_tile
+
+    tile = autotune_tile(1024, _spec(8), batch=2, candidates=(256,), trials=1)
+    assert tile == 256
+    assert tiles._TILE_CACHE[(1024, 8, "bms", False, "vmap")] == 256

@@ -208,6 +208,37 @@ def test_bitfield_pad_key_is_all_ones_every_pass():
 
 
 # ---------------------------------------------------------------------------
+# ISSUE 7 satellites: NaN routing (S1) and float-key rejection (S4)
+# ---------------------------------------------------------------------------
+
+def test_even_spec_nan_routes_to_last_bucket():
+    """NaN fails every comparison, so the old clip left it wherever the
+    scaled id landed (ISSUE 7 S1). It must route DETERMINISTICALLY to the
+    last bucket — the same one the +inf pad key lands in."""
+    s = EvenSpec(0.0, 1.0, 8)
+    keys = jnp.asarray(
+        [0.1, float("nan"), 2.0, -1.0, float("inf"), float("-inf")],
+        jnp.float32,
+    )
+    np.testing.assert_array_equal(np.asarray(s.emit(keys)), [0, 7, 7, 0, 7, 0])
+    pad = jnp.full((2,), s.pad_key(jnp.float32), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(s.emit(pad)), [7, 7])
+
+
+def test_bitfield_spec_rejects_float_keys():
+    """BitfieldSpec.pad_key on a float dtype used to return -1 (the int cast
+    of the float max) and emit produced garbage digits (ISSUE 7 S4): both
+    must refuse float keys loudly."""
+    s = BitfieldSpec(0, 8)
+    with pytest.raises(TypeError, match="integer keys"):
+        s.pad_key(jnp.float32)
+    with pytest.raises(TypeError, match="integer keys"):
+        s.emit(jnp.ones((4,), jnp.float32))
+    # integer dtypes keep working
+    assert int(s.pad_key(jnp.uint32)) == 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
 # the BucketIdentifier deprecation shim + as_spec
 # ---------------------------------------------------------------------------
 

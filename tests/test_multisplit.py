@@ -106,6 +106,50 @@ def test_backend_arg_overrides_use_pallas():
     np.testing.assert_array_equal(np.asarray(modern.keys), np.asarray(ref.keys))
 
 
+@pytest.mark.parametrize("backend", ["reference", "vmap", "pallas-interpret"])
+def test_nan_keys_route_to_last_bucket(backend):
+    """ISSUE 7 S1: NaN fails every comparison, so the pre-fix EvenSpec clip
+    left NaN keys in an arbitrary bucket. They must all land in the LAST
+    bucket (where the +inf pad key lives), on every backend."""
+    from repro import ops
+
+    rng = np.random.RandomState(2)
+    keys = rng.uniform(0.0, 1.0, 1024).astype(np.float32)
+    keys[rng.choice(1024, 50, replace=False)] = np.nan
+    out = ops.multisplit(
+        jnp.asarray(keys), ops.even_buckets(0.0, 1.0, 8), backend=backend
+    )
+    counts = np.asarray(out.bucket_counts)
+    assert counts.sum() == 1024
+    got = np.asarray(out.keys)
+    last = int(np.asarray(out.bucket_starts)[-1])
+    assert np.isnan(got[:last]).sum() == 0
+    assert np.isnan(got[last:last + counts[-1]]).sum() == 50
+
+
+def test_nan_keys_segmented_route_to_last_bucket_per_segment():
+    """S1 on the segmented layout: every segment's NaNs land in that
+    segment's OWN last bucket."""
+    from repro import ops
+
+    rng = np.random.RandomState(3)
+    keys = rng.uniform(0.0, 1.0, 1024).astype(np.float32)
+    keys[rng.choice(1024, 60, replace=False)] = np.nan
+    starts = np.array([0, 512], np.int32)
+    out = ops.segmented_multisplit(
+        jnp.asarray(keys), ops.even_buckets(0.0, 1.0, 8), jnp.asarray(starts)
+    )
+    got = np.asarray(out.keys)
+    s_starts = np.asarray(out.bucket_starts)       # (s, m) segment-local
+    s_counts = np.asarray(out.bucket_counts)
+    for s, (lo, hi) in enumerate(((0, 512), (512, 1024))):
+        seg_nans = np.isnan(keys[lo:hi]).sum()
+        b0 = lo + s_starts[s, -1]
+        span = got[b0:b0 + s_counts[s, -1]]
+        assert np.isnan(span).sum() == seg_nans
+        assert np.isnan(got[lo:b0]).sum() == 0
+
+
 def test_binomial_distribution_inputs():
     """Paper §6.4: extreme non-uniform distributions must still be exact."""
     rng = np.random.RandomState(0)

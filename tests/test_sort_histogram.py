@@ -46,6 +46,21 @@ def test_radix_sort_fused_pallas(radix_bits, method):
     np.testing.assert_array_equal(np.asarray(vs), vals[order])
 
 
+def test_radix_sort_rejects_float_keys():
+    """ISSUE 7 S4: BitfieldSpec digit extraction on float keys silently
+    produced garbage (its pad_key cast to -1). Radix plans must refuse
+    non-integer key dtypes with an actionable error instead."""
+    from repro.core.sort import segmented_radix_sort
+
+    f = jnp.ones((64,), jnp.float32)
+    with pytest.raises(TypeError, match="integer keys"):
+        radix_sort(f)
+    with pytest.raises(TypeError, match="integer keys"):
+        segmented_radix_sort(f, jnp.asarray([0, 32], jnp.int32))
+    with pytest.raises(TypeError, match="integer keys"):
+        radix_sort(f, fuse_digits=True)
+
+
 def test_rb_sort_baseline_matches_multisplit():
     rng = np.random.RandomState(0)
     keys = jnp.asarray(rng.randint(0, 2**30, 4096, dtype=np.uint32))
