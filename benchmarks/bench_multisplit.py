@@ -292,10 +292,81 @@ def run_packed_vs_onehot(emit_json: bool = True, quick: bool = False):
     return results
 
 
+def run_oblivious_vs_gather(emit_json: bool = True, quick: bool = False):
+    """ISSUE 8 measurement (DESIGN.md §15): the gather-free OBLIVIOUS kernel
+    bodies (one-hot selects, 16-bit rank planes, permutation matmuls — the
+    only forms Mosaic lowers with ``interpret=False``) vs the legacy gather
+    forms, through the SAME pallas entry points in interpret mode, outputs
+    bitwise identical.  Points: the packed positions/fused kernels at m=256
+    and the fused2 pair kernels at 2r=8, plus the RangeSpec balanced-tree
+    emit vs the serialized compare chain at s ∈ {31, 255} (satellite 1).
+    ``speedup = t_gather / t_oblivious``; the CI floor asserts the oblivious
+    forms cost <= ~1.1x the gather forms even on a host, where gathers are
+    native.  Appends a trajectory point to BENCH_multisplit.json."""
+    from repro.core.identifiers import BitfieldSpec, RangeSpec
+    from repro.kernels import ops as kops
+
+    results = {}
+    t = 1024                                   # the oblivious packed tile cap
+    n_tiles = max(N // t, 1)
+    rng = np.random.RandomState(0)
+    m = 256
+    ids = jnp.asarray(rng.randint(0, m, (n_tiles, t), dtype=np.int32))
+    keys = jnp.asarray(rng.randint(0, 2**30, (n_tiles, t)).astype(np.uint32))
+    vals = jnp.arange(n_tiles * t, dtype=jnp.int32).reshape(n_tiles, t)
+    g = jnp.asarray(rng.randint(0, 1 << 20, (n_tiles, m), dtype=np.int32))
+
+    def point(tag, fn):
+        timed = {}
+        for form in ("oblivious", "gather"):
+            timed[form] = bench(
+                functools.partial(fn, oblivious=(form == "oblivious")))
+        results[f"oblivious_vs_gather/{tag}/oblivious_s"] = round(timed["oblivious"], 5)
+        results[f"oblivious_vs_gather/{tag}/gather_s"] = round(timed["gather"], 5)
+        results[f"oblivious_vs_gather/{tag}/speedup"] = round(
+            timed["gather"] / timed["oblivious"], 3)
+        row(f"kernels/oblivious_vs_gather/{tag}/oblivious", timed["oblivious"],
+            f"{timed['gather'] / timed['oblivious']:.2f}x vs gather")
+
+    point(f"packed_positions/m={m}", lambda oblivious: kops.packed_tile_positions(
+        ids, g, num_buckets=m, oblivious=oblivious))
+    point(f"packed_fused/m={m}", lambda oblivious: kops.packed_fused_postscan_reorder(
+        ids, g, keys, vals, num_buckets=m, oblivious=oblivious)[0])
+
+    pair = BitfieldSpec(0, 8)
+    point("fused2_fused/onehot/2r=8",
+          lambda oblivious: kops.fused2_fused_postscan_reorder(
+              keys, g, vals, spec=pair, split=4, oblivious=oblivious)[0])
+    if not quick:
+        point("fused2_fused/packed/2r=8",
+              lambda oblivious: kops.fused2_fused_postscan_reorder(
+                  keys, g, vals, spec=pair, split=4, family="packed",
+                  oblivious=oblivious)[0])
+
+    # RangeSpec: balanced-tree emit vs the legacy serialized compare chain
+    flat = _keys()
+    for s in (31, 255):
+        spec = RangeSpec(tuple(int(x) for x in np.sort(
+            rng.choice(2**30, size=s, replace=False)).tolist()))
+        t_tree = bench(jax.jit(spec.emit_in_kernel), flat)
+        t_chain = bench(jax.jit(spec._emit_chain), flat)
+        tag = f"oblivious_vs_gather/rangespec/s={s}"
+        results[f"{tag}/tree_s"] = round(t_tree, 5)
+        results[f"{tag}/chain_s"] = round(t_chain, 5)
+        results[f"{tag}/speedup"] = round(t_chain / t_tree, 3)
+        row(f"kernels/rangespec/s={s}/tree-emit", t_tree,
+            f"{t_chain / t_tree:.2f}x vs chain")
+
+    if emit_json:
+        append_trajectory(results, n=N, key_value=True)
+    return results
+
+
 def main(quick: bool = False):
     if quick:
         # smoke sizes must not pollute the full-sweep trajectory history
         run_packed_vs_onehot(quick=True, emit_json=False)
+        run_oblivious_vs_gather(quick=True, emit_json=False)
         return
     run(key_value=False)
     run(key_value=True)
@@ -304,6 +375,7 @@ def main(quick: bool = False):
     run_batched_vs_host_loop()
     run_fused_labels_vs_materialized()
     run_packed_vs_onehot()
+    run_oblivious_vs_gather()
 
 
 if __name__ == "__main__":

@@ -125,4 +125,18 @@ with tempfile.TemporaryDirectory() as d:                # demo: throwaway cache
     clear_tile_cache()
 # The heuristic-vs-tuned gap is tracked and CI-gated:
 #   PYTHONPATH=src:. python benchmarks/autotune_drift.py --quick --ci-max 1.25
+
+# --- 10. the compiled kernel path (DESIGN.md §15) ---------------------------
+# backend="pallas" means COMPILED-WHEN-AVAILABLE: on a TPU host the kernels
+# lower under Mosaic (interpret=False) — every body is gather/scatter-free
+# by construction (linted: python -m repro.kernels.lint) — and on a
+# TPU-less host the same plans fall back to the interpreter automatically.
+# backend="pallas-interpret" stays pinned to the interpreter (the debug
+# target). Override either way per process with the environment variable:
+#   REPRO_INTERPRET=1   force interpretation everywhere (debug on TPU)
+#   REPRO_INTERPRET=0   force compiled lowering (e.g. CPU Mosaic tests)
+from repro.core.pipeline import get_backend
+
+b = get_backend("pallas")
+print(f"pallas: compiled={b.compiled}, interpret-now={b.stages.interpret}")
 print("quickstart OK")

@@ -247,12 +247,34 @@ class RangeSpec(BucketSpec):
     def emit_in_kernel(self, keys: Array) -> Array:
         if not self.splitters:
             return jnp.zeros(keys.shape, jnp.int32)
-        # unrolled-compare form of emit: each splitter folds into its
-        # compare as a PLANE-dtype scalar (a raw Python int would weak-type
-        # to int32 and overflow for splitters above 2^31; a pallas kernel
-        # can neither lower searchsorted nor capture a constant splitter
-        # array).  O(T·s) over one VMEM tile, the same cost class as the
-        # one-hot itself.
+        # In-kernel form of emit.  A pallas kernel can neither lower
+        # searchsorted nor capture a constant splitter ARRAY — only scalars
+        # fold — so each splitter enters as one PLANE-dtype scalar compare
+        # (a raw Python int would weak-type to int32 and overflow for
+        # splitters above 2^31).  The bucket id is the POPCOUNT of those
+        # compares; summing them pairwise as a balanced binary tree keeps
+        # the dependency depth at O(log s) vector adds (vs the O(s) serial
+        # chain of ``_emit_chain``), which is what unblocks large splitter
+        # counts (s = 255+, the sample-sort regime) — a per-element binary
+        # SEARCH over the splitter domain is impossible without a gather or
+        # a captured array, and would cost O(s) selects per probe anyway.
+        plane, vals = self._compare_plane(keys.dtype)
+        kc = keys.astype(plane)
+        parts = [
+            (kc >= np.asarray(s, plane)[()]).astype(jnp.int32) for s in vals
+        ]
+        while len(parts) > 1:
+            nxt = [a + b for a, b in zip(parts[0::2], parts[1::2])]
+            if len(parts) % 2:
+                nxt.append(parts[-1])
+            parts = nxt
+        return parts[0]
+
+    def _emit_chain(self, keys: Array) -> Array:
+        """Pre-tree serialized compare chain (O(s) dependency depth), kept
+        as the equivalence/bench baseline for :meth:`emit_in_kernel`."""
+        if not self.splitters:
+            return jnp.zeros(keys.shape, jnp.int32)
         plane, vals = self._compare_plane(keys.dtype)
         kc = keys.astype(plane)
         ids = jnp.zeros(keys.shape, jnp.int32)

@@ -60,10 +60,22 @@ class KernelStages(StageImpl):
     just ``BitfieldSpec``), so no label strip exists outside the kernel.
     Only :class:`~repro.core.identifiers.CallableSpec` plans feed the
     kernels precomputed ``ids_tiled``.
+
+    ``compiled=True`` marks the Mosaic-lowering target: its ``interpret``
+    flag is RESOLVED per call (DESIGN.md §15) — compiled when a TPU is
+    attached, interpreted otherwise, ``REPRO_INTERPRET`` overriding both —
+    so ``backend="pallas"`` means compiled-when-available while
+    ``backend="pallas-interpret"`` stays the pinned debug target.
     """
 
-    def __init__(self, interpret: bool):
-        self.interpret = interpret
+    def __init__(self, compiled: bool = False):
+        self.compiled = compiled
+
+    @property
+    def interpret(self) -> bool:
+        from repro.kernels import ops as kops
+
+        return kops.resolve_interpret(self.compiled)
 
     def prescan(self, spec, keys_tiled, ids_tiled, seg_tiled):
         from repro.kernels import ops as kops
@@ -353,6 +365,10 @@ class Backend:
     (the fused-pair in-tile stage width) / ``"fusion"`` (the vmap
     materialize-vs-fuse label choice — kernel backends always fuse, so it
     is not an axis there). The untiled oracle has none.
+    ``compiled`` advertises Mosaic lowering capability (DESIGN.md §15): the
+    backend's kernel bodies are gather/scatter-free (jaxpr-linted) and its
+    ``interpret`` flag resolves per call — compiled on TPU hardware,
+    interpreted on hosts, ``REPRO_INTERPRET`` overriding.
     """
 
     name: str
@@ -360,6 +376,7 @@ class Backend:
     stages: Optional[StageImpl] = None
     tiled: bool = True
     uses_kernels: bool = False
+    compiled: bool = False
     fuses_radix: bool = False
     fuses_labels: bool = False
     fuses_digits: bool = False
@@ -419,8 +436,8 @@ register_backend(Backend(
 ))
 register_backend(Backend(
     name="pallas-interpret",
-    description="Pallas kernels interpreted on CPU",
-    stages=KernelStages(interpret=True),
+    description="Pallas kernels interpreted on CPU (pinned debug target)",
+    stages=KernelStages(compiled=False),
     uses_kernels=True,
     fuses_radix=True,
     fuses_labels=True,
@@ -431,9 +448,10 @@ register_backend(Backend(
 ))
 register_backend(Backend(
     name="pallas",
-    description="Pallas kernels compiled for TPU (deployment target)",
-    stages=KernelStages(interpret=False),
+    description="Pallas kernels, Mosaic-compiled when a TPU is attached",
+    stages=KernelStages(compiled=True),
     uses_kernels=True,
+    compiled=True,
     fuses_radix=True,
     fuses_labels=True,
     fuses_digits=True,

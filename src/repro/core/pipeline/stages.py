@@ -135,10 +135,17 @@ def exclusive_rows(counts: Array) -> Array:
 def packed_tile_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
     """Packed analogue of :func:`tile_local_offsets`: (stable in-bucket
     rank, tile histogram) from k-per-word subword counters + a two-level
-    subtile scan — bitwise identical, ~flat per-key work in ``m``."""
+    subtile scan — bitwise identical, ~flat per-key work in ``m``.
+
+    Deliberately the GATHER form (``oblivious=False``, DESIGN.md §15): XLA
+    gathers are the fast host/vmap path, the vmap oracle must stay free of
+    the oblivious tile-size constraints, and the bitwise identity of the two
+    forms is what the kernel property tests assert."""
     from repro.kernels.common import packed_layout, packed_local_offsets
 
-    return packed_local_offsets(ids, packed_layout(ids.shape[0], m))
+    return packed_local_offsets(
+        ids, packed_layout(ids.shape[0], m), oblivious=False
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -154,11 +161,13 @@ def fused2_tile_counts(
     keys: Array, shift: int, bits: int,
     seg: Optional[Array] = None, num_segments: int = 1,
 ) -> Array:
-    """Per-tile histogram over the combined pair digit (O(T) scatter-add)."""
+    """Per-tile histogram over the combined pair digit (the O(T)
+    scatter-add gather form — the vmap/host fast path; DESIGN.md §15)."""
     from repro.kernels.common import fused2_counts_body
 
     return fused2_counts_body(
-        keys, shift, bits, seg=seg, num_segments=num_segments
+        keys, shift, bits, seg=seg, num_segments=num_segments,
+        oblivious=False,
     )
 
 
@@ -170,12 +179,15 @@ def fused2_tile_postscan(
 ):
     """Per-tile fused two-digit postscan+reorder: digit-``d`` solve, stable
     in-tile reorder, digit-``d+1`` solve on the reordered tile; returns the
-    ``(keys_r, vals_r, pos_r, perm)`` contract of the fused reorder stage."""
+    ``(keys_r, vals_r, pos_r, perm)`` contract of the fused reorder stage.
+    Gather form (``oblivious=False``): the vmap oracle path, free of the
+    oblivious tile constraints (DESIGN.md §15)."""
     from repro.kernels.common import fused2_postscan_body
 
     return fused2_postscan_body(
         keys, g_row, vals, shift, split, bits,
         seg=seg, num_segments=num_segments, family=family, sub_bits=sub_bits,
+        oblivious=False,
     )
 
 

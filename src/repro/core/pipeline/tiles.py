@@ -87,37 +87,48 @@ def _tile_key(n: int, m: int, method: str, key_value: bool, backend: str,
     return base + (digits, stage_m or max(1, int(m ** 0.5)))
 
 
-def _family_cost_bytes(t: int, m: int, family: str) -> int:
+def _family_cost_bytes(t: int, m: int, family: str,
+                       oblivious: bool = False) -> int:
     """Per-tile working set of the fused postscan kernel, in bytes.
 
     onehot: one-hot + its cumsum (2·T·m̄ f32) + the triangular-scan and
     permutation matrices (2·T² f32) + ~8 T-vectors. The pre-PR-5 model
     under-counted this (it charged one T·m̄ plane and no cumsum output),
-    which is why large-m tiles blew past the budget in practice.
+    which is why large-m tiles blew past the budget in practice.  (The
+    dense body was always gather-free, so its model has no oblivious term.)
 
     packed: the (T, ⌈m/k⌉) packed contribution + inclusive-scan planes, the
     small S×m level-2 scan, and ~8 T-vectors — near-flat in m.
+    ``oblivious=True`` (kernel backends, DESIGN.md §15) additionally charges
+    the T×T reorder permutation plane and the T×m one-hot the starts/G
+    picks contract against — the quadratic term pulls the packed tile
+    optimum DOWN on kernel backends, while the vmap gather form keeps its
+    near-flat profile.
     """
     if family == "packed":
         from repro.kernels.common import packed_layout
 
         lay = packed_layout(t, m)
-        return 4 * (2 * t * lay.w + 3 * lay.n_sub * m + 8 * t)
+        base = 4 * (2 * t * lay.w + 3 * lay.n_sub * m + 8 * t)
+        if oblivious:
+            base += 4 * (t * t + 2 * t * m)
+        return base
     m_pad = _pad_lanes(m)
     return 4 * (2 * t * m_pad + 2 * t * t + 8 * t)
 
 
 def _fused2_cost_bytes(t: int, m: int, stage_m: int, family: str,
-                       key_value: bool) -> int:
+                       key_value: bool, oblivious: bool = False) -> int:
     """Per-tile working set of the fused TWO-digit postscan (DESIGN.md §13):
     the double-resident tile model of
     :func:`repro.kernels.common.fused2_vmem_bytes` — the sub-digit LSD
-    sweep's reused stage plane plus the ``m``-wide combined pair rows."""
+    sweep's reused stage plane plus the ``m``-wide combined pair rows
+    (+ the oblivious permutation/pick planes on kernel backends, §15)."""
     from repro.kernels.common import fused2_vmem_bytes
 
     return fused2_vmem_bytes(
         t, stage_m, family=family, key_value=key_value,
-        m_hi=max(1, m // stage_m),
+        m_hi=max(1, m // stage_m), oblivious=oblivious,
     )
 
 
@@ -129,9 +140,13 @@ def _heuristic_tile(
 
     base = WMS_TILE if method in ("dms", "wms") else BMS_TILE
     tile = base
+    # kernel backends trace the oblivious bodies (DESIGN.md §15), so only
+    # they carry the oblivious VMEM terms; vmap keeps the gather profile
+    obl = get_backend(backend).uses_kernels
     if digits == 2:
         cost = lambda t: _fused2_cost_bytes(
-            t, m, stage_m or max(1, int(m ** 0.5)), family, key_value
+            t, m, stage_m or max(1, int(m ** 0.5)), family, key_value,
+            oblivious=obl,
         )
         # A fused pair's global-scan traffic is L·m² words (L = tile count),
         # so pairs only profit when L is SMALL — grow the tile toward the
@@ -142,8 +157,8 @@ def _heuristic_tile(
         while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
             tile //= 2
     else:
-        cost = lambda t: _family_cost_bytes(t, m, family)
-        if get_backend(backend).uses_kernels:
+        cost = lambda t: _family_cost_bytes(t, m, family, oblivious=obl)
+        if obl:
             while tile > _MIN_TILE and cost(tile) > _VMEM_BUDGET_BYTES:
                 tile //= 2
     if n < tile:

@@ -84,6 +84,45 @@ def permutation_matrix(dest: Array) -> Array:
     return (rows == dest[None, :]).astype(jnp.float32)
 
 
+def select_columns(rows: Array, col: Array) -> Array:
+    """``rows[i, col[i]]`` WITHOUT a gather: broadcasted-iota compare along
+    the static column axis + masked sum (exactly one term survives per row).
+    The oblivious, Mosaic-lowerable form of ``take_along_axis(rows, col, 1)``
+    — the TPU analogue of the paper's ballot/shuffle lane exchange."""
+    t, w = rows.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, w), 1)
+    zero = jnp.zeros((), rows.dtype)
+    return jnp.where(cols == col[:, None], rows, zero).sum(axis=1)
+
+
+def pick_row_32(one_hot: Array, row: Array) -> Array:
+    """One-hot pick ``row[ids]`` of FULL-RANGE 32-bit entries: the (T, m) f32
+    one-hot times the row split into 16-bit halves, one MXU matmul, exact
+    (each half < 2^16 ≤ 2^24; mirrors :func:`permute_matmul_32`)."""
+    ri = jax.lax.bitcast_convert_type(row, jnp.uint32)
+    halves = jnp.stack(
+        [(ri & jnp.uint32(0xFFFF)).astype(jnp.float32),
+         (ri >> jnp.uint32(16)).astype(jnp.float32)], axis=1
+    )                                                       # (m, 2)
+    moved = jax.lax.dot(one_hot, halves, precision=jax.lax.Precision.HIGHEST)
+    lo = moved[:, 0].astype(jnp.uint32)
+    hi = moved[:, 1].astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(lo | (hi << jnp.uint32(16)), row.dtype)
+
+
+def rank_plane_pack16(rows: Array) -> Array:
+    """(S, m) int32 ranks (each < 2^16, guarded by ``packed_layout``) ->
+    (S, ceil(m/2)) uint32 LANE-PACKED RANK PLANES: two bucket carries per
+    int32 lane, even bucket in the low half-word. Halves the select width
+    of the packed family's level-2 carry lookup on the oblivious path."""
+    s, m = rows.shape
+    u = rows.astype(jnp.uint32)
+    if m % 2:
+        u = jnp.concatenate([u, jnp.zeros((s, 1), jnp.uint32)], axis=1)
+    u = u.reshape(s, -1, 2)
+    return u[:, :, 0] | (u[:, :, 1] << jnp.uint32(16))
+
+
 def fused_postscan_body(ids, g_row, keys, vals, m_pad: int):
     """THE fused postscan+reorder math, shared by the generic and radix
     kernels (they differ only in where ``ids`` comes from): ONE
@@ -146,6 +185,7 @@ def packed_layout(
     m_eff: int,
     bits: int = DEFAULT_PACKED_BITS,
     subtile: Optional[int] = None,
+    rank16: bool = False,
 ) -> PackedLayout:
     """Resolve (and GUARD) the packed-counter geometry for one tile.
 
@@ -154,9 +194,22 @@ def packed_layout(
     rows could put more than ``2^bits − 1`` equal bucket ids into one
     counter lane (the adversarial all-one-bucket input), silently wrapping
     it.  The auto subtile is the largest power of two that is provably safe
-    (and ≤ 128, one VPU sublane block)."""
+    (and ≤ 128, one VPU sublane block).
+
+    ``rank16=True`` additionally guards the OBLIVIOUS path's 16-bit
+    lane-packed rank planes (:func:`rank_plane_pack16`): two level-2 carries
+    share one int32 lane, and a carry can reach ``tile`` on the adversarial
+    all-one-bucket input, so tiles taller than ``2^16 − 1`` rows would
+    silently wrap a half-word rank."""
     if tile < 1:
         raise ValueError(f"packed layout needs tile >= 1, got {tile}")
+    if rank16 and tile > 0xFFFF:
+        raise ValueError(
+            f"tile={tile} overflows the 16-bit lane-packed rank planes: a "
+            f"level-2 carry can reach {tile} > 65535 and two ranks share "
+            f"one int32 lane on the oblivious path. Use tile <= 65535 (or "
+            f"the gather form, oblivious=False)."
+        )
     if m_eff < 1:
         raise ValueError(f"packed layout needs m_eff >= 1, got {m_eff}")
     if bits not in (1, 2, 4, 8, 16):
@@ -216,13 +269,15 @@ def packed_unpack(packed_rows: Array, layout: PackedLayout) -> Array:
     ].astype(jnp.int32)
 
 
-def _packed_state(ids: Array, layout: PackedLayout):
+def _packed_state(ids: Array, layout: PackedLayout, oblivious: bool = False):
     """The shared two-level solve: (rank_incl, sub_hist, excl_sub).
 
     ``rank_incl`` is the 1-based stable rank of each element within its
     (subtile, bucket) cell; ``sub_hist`` the (S, m_eff) per-subtile
     histograms; ``excl_sub`` their exclusive scan over subtiles (the level-2
-    carry each element adds to reach its within-tile rank)."""
+    carry each element adds to reach its within-tile rank). ``oblivious``
+    swaps the per-element packed-word lookup from a gather to a masked
+    w-wide lane select (Mosaic-lowerable)."""
     ids, _ = _packed_pad_ids(ids, layout)
     t_pad = ids.shape[0]
     q = (ids // layout.k).astype(jnp.int32)
@@ -234,7 +289,10 @@ def _packed_state(ids: Array, layout: PackedLayout):
         contrib.reshape(layout.n_sub, layout.subtile, layout.w), axis=1
     )
     incl = incl3.reshape(t_pad, layout.w)
-    word = jnp.take_along_axis(incl, q[:, None], axis=1)[:, 0]
+    if oblivious:
+        word = select_columns(incl, q)
+    else:
+        word = jnp.take_along_axis(incl, q[:, None], axis=1)[:, 0]
     rank_incl = ((word >> shift) & layout.lane_mask).astype(jnp.int32)
     # level 2: unpack ONLY the S subtile totals and scan those — S*m work
     # instead of the dense family's T*m.
@@ -243,24 +301,62 @@ def _packed_state(ids: Array, layout: PackedLayout):
     return rank_incl, sub_hist, excl_sub
 
 
-def packed_local_offsets(ids: Array, layout: PackedLayout) -> Tuple[Array, Array]:
+def _drop_pad_count(hist: Array, m_eff: int, n_pad: int) -> Array:
+    """Subtract the tail-pad count from the LAST bucket without a scatter:
+    an iota compare + subtract, bitwise equal to ``hist.at[m-1].add(-n)``."""
+    if not n_pad:
+        return hist
+    last = (jnp.arange(m_eff, dtype=jnp.int32) == m_eff - 1)
+    return hist - n_pad * last.astype(hist.dtype)
+
+
+def packed_local_offsets(
+    ids: Array, layout: PackedLayout, oblivious: bool = False
+) -> Tuple[Array, Array]:
     """Packed-counter analogue of the dense one-hot local solve: (stable
     0-based in-bucket rank within the tile, tile histogram), bitwise equal
-    to ``tile_local_offsets(ids, m_eff)``."""
+    to ``tile_local_offsets(ids, m_eff)``.
+
+    ``oblivious=True`` (the compiled kernel path) replaces the level-2 carry
+    gather ``excl_sub[sub, id]`` with 16-BIT LANE-PACKED RANK PLANES: the
+    (S, m_eff) carries are packed two-per-int32-lane, each subtile's plane
+    row is broadcast statically to its rows, and the element's word is a
+    masked ⌈m/2⌉-wide select — half the select width of an unpacked lookup.
+    Exactness requires every carry < 2^16 (tile ≤ 65535; guarded here and
+    in ``packed_layout(rank16=True)``)."""
     t = ids.shape[0]
-    rank_incl, sub_hist, excl_sub = _packed_state(ids, layout)
-    sub_idx = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], 1), 0)[:, 0] // layout.subtile
-    local = excl_sub[sub_idx, ids] + rank_incl[:t] - 1
+    rank_incl, sub_hist, excl_sub = _packed_state(ids, layout, oblivious=oblivious)
+    if oblivious:
+        if layout.tile > 0xFFFF:
+            raise ValueError(
+                f"packed oblivious path: tile={layout.tile} level-2 carries "
+                f"do not fit the 16-bit lane-packed rank planes (max 65535); "
+                f"resolve the layout with packed_layout(rank16=True)"
+            )
+        ids_p, _ = _packed_pad_ids(ids, layout)
+        planes = rank_plane_pack16(excl_sub)                # (S, ceil(m/2))
+        w16 = planes.shape[1]
+        per_row = jnp.broadcast_to(
+            planes[:, None, :], (layout.n_sub, layout.subtile, w16)
+        ).reshape(layout.n_sub * layout.subtile, w16)
+        word = select_columns(per_row, (ids_p // 2).astype(jnp.int32))
+        carry = (
+            (word >> (jnp.uint32(16) * (ids_p % 2).astype(jnp.uint32)))
+            & jnp.uint32(0xFFFF)
+        ).astype(jnp.int32)
+        local = carry[:t] + rank_incl[:t] - 1
+    else:
+        sub_idx = jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)[:, 0] // layout.subtile
+        local = excl_sub[sub_idx, ids] + rank_incl[:t] - 1
     hist = sub_hist.sum(axis=0)
     n_pad = layout.n_sub * layout.subtile - t
-    if n_pad:
-        hist = hist.at[layout.m_eff - 1].add(-n_pad)        # drop internal pads
+    hist = _drop_pad_count(hist, layout.m_eff, n_pad)       # drop internal pads
     return local.astype(jnp.int32), hist.astype(jnp.int32)
 
 
 def packed_counts(ids: Array, layout: PackedLayout) -> Array:
     """Histogram-only form: per-subtile packed SUMS (no scan) + one unpack.
-    Bitwise equal to the dense tile histogram."""
+    Bitwise equal to the dense tile histogram (and gather-free as-is)."""
     t = ids.shape[0]
     ids, n_pad = _packed_pad_ids(ids, layout)
     contrib = packed_encode(ids, layout)
@@ -268,25 +364,43 @@ def packed_counts(ids: Array, layout: PackedLayout) -> Array:
         axis=1, dtype=jnp.uint32
     )
     hist = packed_unpack(sub_tot, layout).sum(axis=0)
-    if n_pad:
-        hist = hist.at[layout.m_eff - 1].add(-n_pad)
+    hist = _drop_pad_count(hist, layout.m_eff, n_pad)
     return hist.astype(jnp.int32)
 
 
-def packed_positions_body(ids: Array, g_row: Array, layout: PackedLayout) -> Array:
+def packed_positions_body(
+    ids: Array, g_row: Array, layout: PackedLayout, oblivious: bool = False
+) -> Array:
     """Packed DMS postscan: global destinations, paper eq. (2)."""
-    local, _ = packed_local_offsets(ids, layout)
+    local, _ = packed_local_offsets(ids, layout, oblivious=oblivious)
+    if oblivious:
+        g_pick = pick_row_32(one_hot_f32(ids, layout.m_eff),
+                             g_row.astype(jnp.int32))
+        return (g_pick + local).astype(jnp.int32)
     return (g_row.astype(jnp.int32)[ids] + local).astype(jnp.int32)
 
 
-def packed_postscan_body(ids, g_row, keys, vals, layout: PackedLayout):
+def packed_postscan_body(
+    ids, g_row, keys, vals, layout: PackedLayout, oblivious: bool = False
+):
     """THE packed fused postscan+reorder: same contract as
     :func:`fused_postscan_body` — (keys_r, vals_r_or_None, pos_r, gpos) with
-    the first three bucket-major within the tile — but built on the
-    two-level packed rank and an in-tile scatter instead of the T×m one-hot
-    cumsum and T×T permutation matmuls."""
-    local, hist = packed_local_offsets(ids, layout)
+    the first three bucket-major within the tile — built on the two-level
+    packed rank. The gather form scatters in-tile; the oblivious form picks
+    starts/G via ONE m_eff-wide one-hot (16-bit-half matmuls, exact for full
+    32-bit globals) and reorders through permutation matmuls — every step a
+    select or an MXU contraction, nothing Mosaic refuses to lower."""
+    local, hist = packed_local_offsets(ids, layout, oblivious=oblivious)
     starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+    if oblivious:
+        oh = one_hot_f32(ids, layout.m_eff)
+        dest = (pick_row_32(oh, starts) + local).astype(jnp.int32)
+        gpos = (pick_row_32(oh, g_row.astype(jnp.int32)) + local).astype(jnp.int32)
+        perm = permutation_matrix(dest)
+        keys_r = permute_matmul_32(perm, keys)
+        pos_r = permute_matmul_32(perm, gpos)
+        vals_r = permute_matmul_32(perm, vals) if vals is not None else None
+        return keys_r, vals_r, pos_r, gpos
     dest = (starts[ids] + local).astype(jnp.int32)          # within-tile destination
     gpos = (g_row.astype(jnp.int32)[ids] + local).astype(jnp.int32)  # eq. (2)
     keys_r = jnp.zeros_like(keys).at[dest].set(keys)
@@ -313,9 +427,11 @@ def packed_postscan_body(ids, g_row, keys, vals, layout: PackedLayout):
 # stages keep every solve plane at T×2^sub instead of T×m — measured ~2×
 # cheaper than two m-wide stage solves at r=8 and strictly less VMEM; the
 # dense direct solve would need a T×m² one-hot, which never exists (the only
-# m²-wide objects are histogram/scan ROWS). Like the packed family, the
-# bodies use in-tile gathers/scatters, so the kernels are interpret-verified
-# (ROADMAP item: Mosaic lowering of gathers is future work).
+# m²-wide objects are histogram/scan ROWS). Every body below carries BOTH
+# forms: the gather/scatter form (``oblivious=False``, the vmap oracle and
+# the host fast path) and the oblivious select/matmul form
+# (``oblivious=True``, the compiled Mosaic path — DESIGN.md §15), bitwise
+# identical by construction and property-tested against each other.
 # ---------------------------------------------------------------------------
 
 # In-tile sub-digit stage width of the fused2 LSD sweep. 4 bits = 16-wide
@@ -335,23 +451,43 @@ def fused2_split_digits(keys: Array, shift: int, bits_lo: int, bits_hi: int):
     return lo, hi
 
 
-def _dense_local_offsets(ids: Array, m: int) -> Tuple[Array, Array]:
+def _dense_local_offsets(
+    ids: Array, m: int, oblivious: bool = False
+) -> Tuple[Array, Array]:
     """Dense int32 one-hot/cumsum local solve: (stable in-bucket rank, tile
-    histogram). The jnp form shared by the fused2 stage solves (the MXU f32
-    form of :func:`fused_postscan_body` is not needed here — the fused2 body
-    is gather/scatter-based like the packed family)."""
+    histogram). The jnp form shared by the fused2 stage solves. The
+    oblivious form reads the element's own cumsum cell with a masked
+    one-hot product instead of ``take_along_axis`` (same int32 math)."""
     t = ids.shape[0]
     one_hot = (ids[:, None] == jnp.arange(m, dtype=jnp.int32)[None, :]).astype(jnp.int32)
     incl = jnp.cumsum(one_hot, axis=0)
-    local = jnp.take_along_axis(incl, ids[:, None].astype(jnp.int32), axis=1)[:, 0] - 1
+    if oblivious:
+        local = (incl * one_hot).sum(axis=1) - 1
+    else:
+        local = jnp.take_along_axis(incl, ids[:, None].astype(jnp.int32), axis=1)[:, 0] - 1
     return local.astype(jnp.int32), incl[t - 1].astype(jnp.int32)
 
 
-def _fused2_stage_local(ids: Array, m: int, family: str) -> Tuple[Array, Array]:
+def _fused2_stage_local(
+    ids: Array, m: int, family: str, oblivious: bool = False
+) -> Tuple[Array, Array]:
     """One m-wide stage solve of the fused pair, in the plan's kernel family."""
     if family == "packed":
-        return packed_local_offsets(ids, packed_layout(ids.shape[0], m))
-    return _dense_local_offsets(ids, m)
+        lay = packed_layout(ids.shape[0], m, rank16=oblivious)
+        return packed_local_offsets(ids, lay, oblivious=oblivious)
+    return _dense_local_offsets(ids, m, oblivious=oblivious)
+
+
+def _pair_hist2d_shape(bits: int, num_segments: int) -> Tuple[int, int, int]:
+    """Factor the (segments × pair) histogram axis for the oblivious
+    two-level one-hot contraction: ``cg = row · n_cols + col`` with
+    ``n_cols = 2^⌈bits/2⌉`` columns (the pair's low half) and
+    ``n_rows = segments · 2^(bits−⌈bits/2⌉)`` rows (segment + high half).
+    Keeps the one-hot planes at T×(√m²) each instead of T×m²."""
+    col_bits = (bits + 1) // 2
+    n_cols = 1 << col_bits
+    n_rows = (1 << (bits - col_bits)) * num_segments
+    return col_bits, n_rows, n_cols
 
 
 def fused2_counts_body(
@@ -360,17 +496,26 @@ def fused2_counts_body(
     bits: int,
     seg: Optional[Array] = None,
     num_segments: int = 1,
+    oblivious: bool = False,
 ) -> Array:
     """Per-tile histogram over the combined ``bits``-wide pair digit (the
-    fused2 prescan): an O(T) scatter-add — the pair axis is m² wide, so the
-    dense T×m² one-hot is never built. Order-invariant, hence computed on
-    the UN-reordered tile; bitwise equal to the histogram the postscan body
-    derives from its cell counts."""
+    fused2 prescan). The gather form is an O(T) scatter-add. The oblivious
+    form factors the m²·s-wide axis into (row, column) halves and contracts
+    the two one-hots on the MXU — ``histᵀ = oh_rowᵀ · oh_col`` — so the
+    planes stay T×√m² each and the counts (< 2^24) are f32-exact. Both are
+    order-invariant, hence computed on the UN-reordered tile; bitwise equal
+    to the histogram the postscan body derives from its cell counts."""
     m2 = 1 << bits
     u = keys.astype(jnp.uint32)
     pair = ((u >> jnp.uint32(shift)) & jnp.uint32(m2 - 1)).astype(jnp.int32)
     cg = pair if seg is None else seg * m2 + pair
-    return jnp.zeros((m2 * num_segments,), jnp.int32).at[cg].add(1)
+    if not oblivious:
+        return jnp.zeros((m2 * num_segments,), jnp.int32).at[cg].add(1)
+    col_bits, n_rows, n_cols = _pair_hist2d_shape(bits, num_segments)
+    oh_r = one_hot_f32((cg >> col_bits).astype(jnp.int32), n_rows)
+    oh_c = one_hot_f32((cg & (n_cols - 1)).astype(jnp.int32), n_cols)
+    hist2d = jax.lax.dot(oh_r.T, oh_c, precision=jax.lax.Precision.HIGHEST)
+    return hist2d.reshape(-1).astype(jnp.int32)
 
 
 def fused2_postscan_body(
@@ -384,6 +529,7 @@ def fused2_postscan_body(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = False,
 ):
     """THE fused two-digit postscan+reorder: same contract as
     :func:`fused_postscan_body` / :func:`packed_postscan_body` —
@@ -395,13 +541,23 @@ def fused2_postscan_body(
     identity the RESULT depends only on the combined stable pass, not on how
     the in-tile solve is decomposed — so the body is free to decompose
     further: an in-VMEM LSD sweep over ``_FUSED2_SUB_BITS``-wide sub-digit
-    stages (stable stage solve + keys/index scatter per stage, segment id as
+    stages (stable stage solve + in-VMEM reorder per stage, segment id as
     the most-significant stage). Each stage's solve plane is T×2^sub instead
     of T×m — measured ~2× cheaper than two ``split``-wide stage solves at
     r=8 — and after the sweep the tile is already (seg, pair)-bucket-major,
     so the stable in-cell rank is just position minus the cell's tile start.
     The caller's single scatter per pair stays bitwise identical to the two
     chained single-digit scatters it replaces.
+
+    ``oblivious=True`` (the compiled kernel path) removes every in-tile
+    gather/scatter, bitwise-identically: stage reorders become permutation
+    matmuls (segments ride the permutation instead of being gathered by
+    ``seg[idx2]``), the m²·s-wide cell histogram becomes the two-level
+    one-hot MXU contraction of :func:`fused2_counts_body`, per-cell
+    starts/G lookups become row-matmul × column-select picks in 16-bit
+    halves (exact for full 32-bit globals), and the final element-order /
+    values permutations apply the ONE tracked source permutation (and its
+    transpose) as matmuls.
     """
     t = keys.shape[0]
     del split  # decomposition is sub-digit-wide; result is split-invariant
@@ -412,30 +568,76 @@ def fused2_postscan_body(
     m2 = 1 << bits
     idx = jnp.arange(t, dtype=jnp.int32)
     keys2, idx2 = keys, idx
+    seg2 = seg if oblivious else None   # oblivious path carries seg in-order
 
-    def _stage(d, m, keys2, idx2):
-        local, hist = _fused2_stage_local(d, m, family)
+    def _stage(d, m, keys2, idx2, seg2):
+        local, hist = _fused2_stage_local(d, m, family, oblivious=oblivious)
         starts = (jnp.cumsum(hist) - hist).astype(jnp.int32)
+        if oblivious:
+            starts_d = select_columns(jnp.broadcast_to(starts[None, :], (t, m)), d)
+            perm = permutation_matrix(starts_d + local)
+            keys2 = permute_matmul_32(perm, keys2)
+            idx2 = permute_matmul_32(perm, idx2)
+            if seg2 is not None:
+                seg2 = permute_matmul_32(perm, seg2)
+            return keys2, idx2, seg2
         dest = starts[d] + local
         return (jnp.zeros_like(keys2).at[dest].set(keys2),
-                jnp.zeros_like(idx2).at[dest].set(idx2))
+                jnp.zeros_like(idx2).at[dest].set(idx2), seg2)
 
     # ---- in-VMEM LSD sweep: sub-digit stages LSB→MSB across the pair bits;
-    # values/segments are never scattered per stage — idx2 tracks the source
-    # slot, so they are gathered once at the end.
+    # values are never moved per stage — idx2 tracks the source slot, so
+    # they are picked up once at the end.
     for off in range(0, bits, sb):
         b = min(sb, bits - off)
         m = 1 << b
         d = ((keys2.astype(jnp.uint32) >> jnp.uint32(shift + off))
              & jnp.uint32(m - 1)).astype(jnp.int32)
-        keys2, idx2 = _stage(d, m, keys2, idx2)
+        keys2, idx2, seg2 = _stage(d, m, keys2, idx2, seg2)
     if seg is not None and num_segments > 1:
-        keys2, idx2 = _stage(seg[idx2], num_segments, keys2, idx2)
+        d_seg = seg2 if oblivious else seg[idx2]
+        keys2, idx2, seg2 = _stage(d_seg, num_segments, keys2, idx2, seg2)
 
     # ---- placement: the tile is (seg, pair)-bucket-major, so the stable
     # in-cell rank is position minus the cell's tile start
     pair2 = ((keys2.astype(jnp.uint32) >> jnp.uint32(shift))
              & jnp.uint32(m2 - 1)).astype(jnp.int32)
+    if oblivious:
+        cg2 = pair2 if seg is None else seg2 * m2 + pair2
+        col_bits, n_rows, n_cols = _pair_hist2d_shape(bits, num_segments)
+        row2 = (cg2 >> col_bits).astype(jnp.int32)
+        col2 = (cg2 & (n_cols - 1)).astype(jnp.int32)
+        oh_r = one_hot_f32(row2, n_rows)                    # (T, R)
+        oh_c = one_hot_f32(col2, n_cols)                    # (T, C)
+        hist2d = jax.lax.dot(oh_r.T, oh_c, precision=jax.lax.Precision.HIGHEST)
+        hist_c = hist2d.reshape(-1).astype(jnp.int32)
+        starts_t = (jnp.cumsum(hist_c) - hist_c).astype(jnp.int32)
+
+        col_iota = jax.lax.broadcasted_iota(jnp.int32, (t, n_cols), 1)
+        col_mask = (col_iota == col2[:, None])
+
+        def _pick2d(flat_vals):
+            # flat_vals[cg2] without a gather: one-hot row matmul brings the
+            # element's (C,) row slice in, a masked column select finishes;
+            # 16-bit halves keep full 32-bit values f32-exact.
+            u = jax.lax.bitcast_convert_type(
+                flat_vals.reshape(n_rows, n_cols), jnp.uint32)
+            lo = jax.lax.dot(oh_r, (u & jnp.uint32(0xFFFF)).astype(jnp.float32),
+                             precision=jax.lax.Precision.HIGHEST)
+            hi = jax.lax.dot(oh_r, (u >> jnp.uint32(16)).astype(jnp.float32),
+                             precision=jax.lax.Precision.HIGHEST)
+            lo_s = jnp.where(col_mask, lo, 0.0).sum(axis=1).astype(jnp.uint32)
+            hi_s = jnp.where(col_mask, hi, 0.0).sum(axis=1).astype(jnp.uint32)
+            return jax.lax.bitcast_convert_type(
+                lo_s | (hi_s << jnp.uint32(16)), jnp.int32)
+
+        local_c = idx - _pick2d(starts_t)
+        gpos2 = (_pick2d(g_row.astype(jnp.int32)) + local_c).astype(jnp.int32)
+        q = permutation_matrix(idx2)         # q[j, i] = (idx2_i == j)
+        vals_r = permute_matmul_32(q.T, vals) if vals is not None else None
+        gpos = permute_matmul_32(q, gpos2)                  # element-ordered perm
+        return keys2, vals_r, gpos2, gpos
+
     cg2 = pair2 if seg is None else seg[idx2] * m2 + pair2
     hist_c = jnp.zeros((m2 * num_segments,), jnp.int32).at[cg2].add(1)
     starts_t = (jnp.cumsum(hist_c) - hist_c).astype(jnp.int32)
@@ -457,6 +659,7 @@ def fused2_positions_body(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = False,
 ) -> Array:
     """Fused2 DMS postscan: global pair destinations in element order —
     the ``gpos`` byproduct of the full body (the in-VMEM reorder is still
@@ -464,13 +667,14 @@ def fused2_positions_body(
     return fused2_postscan_body(
         keys, g_row, None, shift, split, bits, seg=seg,
         num_segments=num_segments, family=family, sub_bits=sub_bits,
+        oblivious=oblivious,
     )[3]
 
 
 def fused2_vmem_bytes(
     tile: int, m_lo: int, num_segments: int = 1, family: str = "onehot",
     key_value: bool = False, m_hi: Optional[int] = None,
-    sub_bits: Optional[int] = None,
+    sub_bits: Optional[int] = None, oblivious: bool = False,
 ) -> int:
     """Working-set model of the DOUBLE-RESIDENT fused2 tile, in bytes: ONE
     sub-digit-wide stage solve plane (reused across the LSD sweep's stages —
@@ -478,10 +682,17 @@ def fused2_vmem_bytes(
     reordered keys/index copies living alongside the originals (+ the values
     gather when key-value), and the m²-wide histogram/scan/starts rows. The
     tile heuristic budgets this instead of the single-digit cost when
-    ``digits=2`` (DESIGN.md §13) — note it grows only ~linearly in T with a
-    SMALL constant, which is what lets fused tiles be much larger than
-    single-digit ones (and they must be: a pair's G traffic is L·m² words,
-    so the pair only profits when L is small)."""
+    ``digits=2`` (DESIGN.md §13) — the gather form grows only ~linearly in T
+    with a SMALL constant, which is what lets fused tiles be much larger
+    than single-digit ones (and they must be: a pair's G traffic is L·m²
+    words, so the pair only profits when L is small).
+
+    ``oblivious=True`` (the kernel backends' compiled-lowerable bodies)
+    additionally charges the T×T permutation planes (one per in-flight
+    stage reorder plus the tracked source permutation) and the two-level
+    one-hot / pick planes (T×(R + 2C) f32, R·C = m²·s) — the quadratic term
+    dominates and pulls the fused2 tile optimum DOWN on kernel backends,
+    the opposite shift of the gather form (DESIGN.md §15)."""
     m_hi = m_lo if m_hi is None else m_hi
     m2 = m_lo * m_hi
     stage_w = max(min(1 << (sub_bits or _FUSED2_SUB_BITS), max(m_lo, m_hi)),
@@ -494,7 +705,12 @@ def fused2_vmem_bytes(
     # keys + keys2 + idx2 + digit strip + dest (+ values, values gather)
     resident = 4 * tile * (5 + (2 if key_value else 0))
     pair_rows = 4 * 3 * m2 * num_segments                   # hist / G row / starts
-    return solve + resident + pair_rows
+    total = solve + resident + pair_rows
+    if oblivious:
+        bits = max(1, (m2 - 1).bit_length())
+        _, n_rows, n_cols = _pair_hist2d_shape(bits, num_segments)
+        total += 4 * (2 * tile * tile + tile * (n_rows + 2 * n_cols))
+    return total
 
 
 def permute_matmul_32(perm: Array, x: Array) -> Array:

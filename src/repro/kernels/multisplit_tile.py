@@ -414,6 +414,29 @@ def spec_tile_positions_pallas(
     )(keys_tiled, g_pad)
 
 
+def _spec_ids_kernel(keys_ref, ids_ref, *, spec):
+    ids_ref[0, :] = spec.emit_in_kernel(keys_ref[0, :]).astype(jnp.int32)
+
+
+def spec_bucket_ids_pallas(
+    keys_tiled: Array, spec, *, interpret: bool = True
+) -> Array:
+    """(L, T) keys -> (L, T) int32 bucket ids: ``spec.emit_in_kernel``
+    evaluated per tile. The generic materialized-label entry point — any
+    declarative BucketSpec, same plan/tile machinery as every other kernel
+    (replaces the seed-era fixed-even-spec kernel in histogram_tile.py)."""
+    n_tiles, t = keys_tiled.shape
+    row = pl.BlockSpec((1, t), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_spec_ids_kernel, spec=spec),
+        grid=(n_tiles,),
+        in_specs=[row],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, t), jnp.int32),
+        interpret=interpret,
+    )(keys_tiled)
+
+
 def _spec_fused_postscan_kernel(*refs, spec, m_pad: int, has_values: bool):
     if has_values:
         (keys_ref, g_ref, vals_ref,
@@ -668,13 +691,16 @@ def packed_tile_histograms_pallas(
     )(*((tiled, seg_tiled) if has_seg else (tiled,)))
 
 
-def _packed_positions_kernel(*refs, spec, m: int, has_seg: bool, layout):
+def _packed_positions_kernel(*refs, spec, m: int, has_seg: bool, layout,
+                             oblivious: bool):
     if has_seg:
         x_ref, seg_ref, g_ref, pos_ref = refs
     else:
         (x_ref, g_ref, pos_ref), seg_ref = refs, None
     ids = _packed_ids(x_ref[0, :], seg_ref, spec=spec, m=m)
-    pos_ref[0, :] = packed_positions_body(ids, g_ref[0, :], layout)
+    pos_ref[0, :] = packed_positions_body(
+        ids, g_ref[0, :], layout, oblivious=oblivious
+    )
 
 
 def packed_tile_positions_pallas(
@@ -687,14 +713,17 @@ def packed_tile_positions_pallas(
     num_segments: int = 1,
     bits: Optional[int] = None,
     subtile: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """Packed DMS postscan: (L, T) ids/keys + (L, s*m) bases -> (L, T)
-    destinations (paper eq. (2)); two-level packed rank, no one-hot."""
+    destinations (paper eq. (2)); two-level packed rank, no one-hot.
+    ``oblivious`` (default) traces the gather-free rank-plane body that
+    lowers under Mosaic; ``oblivious=False`` keeps the gather form."""
     n_tiles, t = tiled.shape
     m = spec.num_buckets if spec is not None else num_buckets
     m_eff = m * num_segments
-    layout = packed_layout(t, m_eff, **_layout_kw(bits, subtile))
+    layout = packed_layout(t, m_eff, rank16=oblivious, **_layout_kw(bits, subtile))
     row = pl.BlockSpec((1, t), lambda i: (i, 0))
     grow = pl.BlockSpec((1, m_eff), lambda i: (i, 0))
     has_seg = seg_tiled is not None
@@ -702,7 +731,8 @@ def packed_tile_positions_pallas(
     args = (tiled, seg_tiled, g) if has_seg else (tiled, g)
     return pl.pallas_call(
         functools.partial(
-            _packed_positions_kernel, spec=spec, m=m, has_seg=has_seg, layout=layout
+            _packed_positions_kernel, spec=spec, m=m, has_seg=has_seg,
+            layout=layout, oblivious=oblivious,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,
@@ -713,7 +743,8 @@ def packed_tile_positions_pallas(
 
 
 def _packed_fused_kernel(
-    *refs, spec, m: int, has_seg: bool, has_keys: bool, has_values: bool, layout
+    *refs, spec, m: int, has_seg: bool, has_keys: bool, has_values: bool,
+    layout, oblivious: bool,
 ):
     refs = list(refs)
     x_ref = refs.pop(0)
@@ -729,7 +760,7 @@ def _packed_fused_kernel(
     ids = _packed_ids(x_ref[0, :], seg_ref, spec=spec, m=m)
     keys_r, vals_r, pos_r, gpos = packed_postscan_body(
         ids, g_ref[0, :], keys_ref[0, :],
-        vals_ref[0, :] if has_values else None, layout,
+        vals_ref[0, :] if has_values else None, layout, oblivious=oblivious,
     )
     keys_out_ref[0, :] = keys_r
     pos_out_ref[0, :] = pos_r
@@ -750,6 +781,7 @@ def packed_fused_postscan_reorder_pallas(
     num_segments: int = 1,
     bits: Optional[int] = None,
     subtile: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """Packed WMS/BMS postscan+reorder: the output contract of
@@ -758,11 +790,13 @@ def packed_fused_postscan_reorder_pallas(
 
     ``tiled`` is the id strip (with ``keys_tiled`` alongside) or, when
     ``spec`` is given, the key strip itself (labels in-register; no separate
-    keys input)."""
+    keys input). ``oblivious`` (default) traces the gather-free select/
+    permutation-matmul body (DESIGN.md §15); ``oblivious=False`` keeps the
+    gather/scatter form."""
     n_tiles, t = tiled.shape
     m = spec.num_buckets if spec is not None else num_buckets
     m_eff = m * num_segments
-    layout = packed_layout(t, m_eff, **_layout_kw(bits, subtile))
+    layout = packed_layout(t, m_eff, rank16=oblivious, **_layout_kw(bits, subtile))
     has_seg = seg_tiled is not None
     has_keys = keys_tiled is not None
     has_values = values_tiled is not None
@@ -786,6 +820,7 @@ def packed_fused_postscan_reorder_pallas(
         functools.partial(
             _packed_fused_kernel, spec=spec, m=m, has_seg=has_seg,
             has_keys=has_keys, has_values=has_values, layout=layout,
+            oblivious=oblivious,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,
@@ -813,7 +848,7 @@ def packed_fused_postscan_reorder_pallas(
 # ---------------------------------------------------------------------------
 
 def _fused2_hist_kernel(*refs, shift: int, bits: int, num_segments: int,
-                        has_seg: bool):
+                        has_seg: bool, oblivious: bool):
     if has_seg:
         keys_ref, seg_ref, hist_ref = refs
     else:
@@ -821,6 +856,7 @@ def _fused2_hist_kernel(*refs, shift: int, bits: int, num_segments: int,
     hist_ref[0, :] = fused2_counts_body(
         keys_ref[0, :], shift, bits,
         seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
+        oblivious=oblivious,
     )
 
 
@@ -830,11 +866,14 @@ def fused2_tile_histograms_pallas(
     *,
     seg_tiled: Optional[Array] = None,
     num_segments: int = 1,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """Fused2 prescan: (L, T) keys [+ (L, T) segment ids] -> (L, s·m²)
-    combined pair histograms (an O(T) in-kernel scatter-add; the m²-wide
-    one-hot never exists)."""
+    combined pair histograms. ``oblivious`` (default) contracts two
+    half-width one-hots on the MXU (Mosaic-lowerable); ``oblivious=False``
+    keeps the O(T) in-kernel scatter-add. The m²-wide one-hot never exists
+    on either path."""
     n_tiles, t = keys_tiled.shape
     m_eff = spec.num_buckets * num_segments
     row = pl.BlockSpec((1, t), lambda i: (i, 0))
@@ -842,7 +881,7 @@ def fused2_tile_histograms_pallas(
     return pl.pallas_call(
         functools.partial(
             _fused2_hist_kernel, shift=spec.shift, bits=spec.bits,
-            num_segments=num_segments, has_seg=has_seg,
+            num_segments=num_segments, has_seg=has_seg, oblivious=oblivious,
         ),
         grid=(n_tiles,),
         in_specs=[row] * (2 if has_seg else 1),
@@ -854,7 +893,8 @@ def fused2_tile_histograms_pallas(
 
 def _fused2_positions_kernel(*refs, shift: int, split: int, bits: int,
                              num_segments: int, family: str,
-                             sub_bits: Optional[int], has_seg: bool):
+                             sub_bits: Optional[int], has_seg: bool,
+                             oblivious: bool):
     if has_seg:
         keys_ref, seg_ref, g_ref, pos_ref = refs
     else:
@@ -862,7 +902,7 @@ def _fused2_positions_kernel(*refs, shift: int, split: int, bits: int,
     pos_ref[0, :] = fused2_positions_body(
         keys_ref[0, :], g_ref[0, :], shift, split, bits,
         seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
-        family=family, sub_bits=sub_bits,
+        family=family, sub_bits=sub_bits, oblivious=oblivious,
     )
 
 
@@ -876,6 +916,7 @@ def fused2_tile_positions_pallas(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """Fused2 DMS postscan: (L, T) keys + (L, s·m²) pair bases -> (L, T)
@@ -892,7 +933,7 @@ def fused2_tile_positions_pallas(
         functools.partial(
             _fused2_positions_kernel, shift=spec.shift, split=split,
             bits=spec.bits, num_segments=num_segments, family=family,
-            sub_bits=sub_bits, has_seg=has_seg,
+            sub_bits=sub_bits, has_seg=has_seg, oblivious=oblivious,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,
@@ -905,7 +946,7 @@ def fused2_tile_positions_pallas(
 def _fused2_fused_kernel(*refs, shift: int, split: int, bits: int,
                          num_segments: int, family: str,
                          sub_bits: Optional[int], has_seg: bool,
-                         has_values: bool):
+                         has_values: bool, oblivious: bool):
     refs = list(refs)
     keys_ref = refs.pop(0)
     seg_ref = refs.pop(0) if has_seg else None
@@ -920,7 +961,7 @@ def _fused2_fused_kernel(*refs, shift: int, split: int, bits: int,
         keys_ref[0, :], g_ref[0, :],
         vals_ref[0, :] if has_values else None, shift, split, bits,
         seg=seg_ref[0, :] if has_seg else None, num_segments=num_segments,
-        family=family, sub_bits=sub_bits,
+        family=family, sub_bits=sub_bits, oblivious=oblivious,
     )
     keys_out_ref[0, :] = keys_r
     pos_out_ref[0, :] = pos_r
@@ -940,12 +981,15 @@ def fused2_fused_postscan_reorder_pallas(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """THE fused two-digit postscan+reorder: output contract of
     :func:`fused_postscan_reorder_pallas` over the combined pair digit —
     both digit solves and the intermediate reorder stay in VMEM; the
-    caller's single scatter per PAIR is the only HBM round trip."""
+    caller's single scatter per PAIR is the only HBM round trip.
+    ``oblivious`` (default) traces the gather-free stage-permutation body
+    of DESIGN.md §15; ``oblivious=False`` keeps the gather/scatter form."""
     n_tiles, t = keys_tiled.shape
     m_eff = spec.num_buckets * num_segments
     has_seg = seg_tiled is not None
@@ -969,6 +1013,7 @@ def fused2_fused_postscan_reorder_pallas(
             _fused2_fused_kernel, shift=spec.shift, split=split,
             bits=spec.bits, num_segments=num_segments, family=family,
             sub_bits=sub_bits, has_seg=has_seg, has_values=has_values,
+            oblivious=oblivious,
         ),
         grid=(n_tiles,),
         in_specs=in_specs,

@@ -1,23 +1,52 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret=True`` executes kernel bodies in Python on CPU (this container);
-``interpret=False`` compiles for TPU (the deployment target). The wrappers
-are the only entry points the rest of the framework uses.
+``interpret=True`` executes kernel bodies in Python on CPU;
+``interpret=False`` compiles for TPU via Mosaic. Since the oblivious-body
+PR (DESIGN.md §15) every kernel body is gather/scatter-free by default, so
+the compiled path is the NORMAL path on TPU hardware: callers resolve the
+flag per backend with :func:`resolve_interpret` (compiled when a TPU is
+attached, interpreted otherwise, ``REPRO_INTERPRET`` overriding both). The
+wrappers are the only entry points the rest of the framework uses.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import histogram_tile as _hist
+from repro.core.identifiers import EvenSpec
 from repro.kernels import multisplit_tile as _mst
 from repro.kernels import radix_pass as _radix
 
 Array = jnp.ndarray
+
+
+@functools.lru_cache(maxsize=1)
+def _tpu_available() -> bool:
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except RuntimeError:                    # no backend at all
+        return False
+
+
+def resolve_interpret(compiled: bool) -> bool:
+    """The per-backend ``interpret`` flag (DESIGN.md §15).
+
+    ``REPRO_INTERPRET=1`` forces interpret mode everywhere (the debug
+    escape hatch); ``REPRO_INTERPRET=0`` forces compiled lowering (CI for
+    the Mosaic path on TPU runners). Unset, a ``compiled``-capable backend
+    lowers compiled exactly when a TPU is attached — this container has
+    none, so the default stays bitwise-identical interpret execution."""
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return not (compiled and _tpu_available())
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
@@ -169,7 +198,8 @@ def packed_tile_histograms(
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_buckets", "spec", "num_segments", "bits", "subtile", "interpret"))
+    "num_buckets", "spec", "num_segments", "bits", "subtile", "oblivious",
+    "interpret"))
 def packed_tile_positions(
     tiled: Array,
     g: Array,
@@ -180,18 +210,20 @@ def packed_tile_positions(
     num_segments: int = 1,
     bits: Optional[int] = None,
     subtile: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """THE packed DMS postscan entry point (see multisplit_tile)."""
     return _mst.packed_tile_positions_pallas(
         tiled, g, num_buckets if spec is None else spec.num_buckets,
         spec=spec, seg_tiled=seg_tiled, num_segments=num_segments, bits=bits,
-        subtile=subtile, interpret=interpret,
+        subtile=subtile, oblivious=oblivious, interpret=interpret,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_buckets", "spec", "num_segments", "bits", "subtile", "interpret"))
+    "num_buckets", "spec", "num_segments", "bits", "subtile", "oblivious",
+    "interpret"))
 def packed_fused_postscan_reorder(
     tiled: Array,
     g: Array,
@@ -204,6 +236,7 @@ def packed_fused_postscan_reorder(
     num_segments: int = 1,
     bits: Optional[int] = None,
     subtile: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """THE packed WMS/BMS postscan+reorder entry point (see multisplit_tile)."""
@@ -211,7 +244,7 @@ def packed_fused_postscan_reorder(
         tiled, g, keys_tiled, values_tiled, spec=spec,
         num_buckets=num_buckets, seg_tiled=seg_tiled,
         num_segments=num_segments, bits=bits, subtile=subtile,
-        interpret=interpret,
+        oblivious=oblivious, interpret=interpret,
     )
 
 
@@ -221,24 +254,27 @@ def packed_fused_postscan_reorder(
 # so all tiles of all pair passes with equal (spec, split, config) share one
 # trace. ONE wrapper per stage covers {flat | segmented} × {keys | key-value}.
 
-@functools.partial(jax.jit, static_argnames=("spec", "num_segments", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "num_segments", "oblivious", "interpret"))
 def fused2_tile_histograms(
     keys_tiled: Array,
     seg_tiled: Optional[Array] = None,
     *,
     spec,
     num_segments: int = 1,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """THE fused2 prescan entry point (see multisplit_tile)."""
     return _mst.fused2_tile_histograms_pallas(
         keys_tiled, spec, seg_tiled=seg_tiled, num_segments=num_segments,
-        interpret=interpret,
+        oblivious=oblivious, interpret=interpret,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "spec", "split", "num_segments", "family", "sub_bits", "interpret"))
+    "spec", "split", "num_segments", "family", "sub_bits", "oblivious",
+    "interpret"))
 def fused2_tile_positions(
     keys_tiled: Array,
     g: Array,
@@ -249,18 +285,20 @@ def fused2_tile_positions(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Array:
     """THE fused2 DMS postscan entry point (see multisplit_tile)."""
     return _mst.fused2_tile_positions_pallas(
         keys_tiled, g, spec, split, seg_tiled=seg_tiled,
         num_segments=num_segments, family=family, sub_bits=sub_bits,
-        interpret=interpret,
+        oblivious=oblivious, interpret=interpret,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "spec", "split", "num_segments", "family", "sub_bits", "interpret"))
+    "spec", "split", "num_segments", "family", "sub_bits", "oblivious",
+    "interpret"))
 def fused2_fused_postscan_reorder(
     keys_tiled: Array,
     g: Array,
@@ -272,13 +310,14 @@ def fused2_fused_postscan_reorder(
     num_segments: int = 1,
     family: str = "onehot",
     sub_bits: Optional[int] = None,
+    oblivious: bool = True,
     interpret: bool = True,
 ) -> Tuple[Array, Optional[Array], Array, Array]:
     """THE fused two-digit postscan+reorder entry point (see multisplit_tile)."""
     return _mst.fused2_fused_postscan_reorder_pallas(
         keys_tiled, g, values_tiled, spec=spec, split=split,
         seg_tiled=seg_tiled, num_segments=num_segments, family=family,
-        sub_bits=sub_bits, interpret=interpret,
+        sub_bits=sub_bits, oblivious=oblivious, interpret=interpret,
     )
 
 
@@ -363,14 +402,31 @@ def seg_radix_fused_postscan_reorder(
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
 def device_histogram(ids_tiled: Array, num_buckets: int, interpret: bool = True) -> Array:
-    return _hist.device_histogram_pallas(ids_tiled, num_buckets, interpret=interpret)
+    """(L, T) ids -> (m,) device-wide histogram: the generic per-tile
+    prescan kernel reduced over tiles (replaces the seed-era revisited-block
+    kernel in histogram_tile.py — same result, one kernel family)."""
+    return _mst.tile_histograms_pallas(
+        ids_tiled, num_buckets, interpret=interpret
+    ).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def spec_bucket_ids(keys_tiled: Array, spec, interpret: bool = True) -> Array:
+    """(L, T) keys -> (L, T) int32 bucket ids for ANY declarative spec
+    (the generic materialized-label entry point)."""
+    return _mst.spec_bucket_ids_pallas(keys_tiled, spec, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi", "num_buckets", "interpret"))
 def even_bucket_ids(
     keys_tiled: Array, lo: float, hi: float, num_buckets: int, interpret: bool = True
 ) -> Array:
-    return _hist.even_bucket_ids_pallas(keys_tiled, lo, hi, num_buckets, interpret=interpret)
+    """Even-bucket identification via the generic spec-ids kernel (the
+    fixed-function even kernel of histogram_tile.py, subsumed)."""
+    return _mst.spec_bucket_ids_pallas(
+        keys_tiled, EvenSpec(float(lo), float(hi), num_buckets),
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("shift", "bits", "interpret"))

@@ -45,8 +45,13 @@ def test_registry_capability_flags():
     for name in ("pallas-interpret", "pallas"):
         b = get_backend(name)
         assert b.uses_kernels and b.fuses_radix and b.key_itemsize == 4
-    assert get_backend("pallas-interpret").stages.interpret
-    assert not get_backend("pallas").stages.interpret
+    # 'pallas' is COMPILED-when-available: interpret resolves dynamically
+    # from Backend.compiled × TPU presence × REPRO_INTERPRET (DESIGN.md §15).
+    assert not get_backend("pallas-interpret").compiled
+    assert get_backend("pallas").compiled
+    from repro.kernels import ops as kops
+    assert get_backend("pallas-interpret").stages.interpret is True
+    assert get_backend("pallas").stages.interpret == kops.resolve_interpret(True)
 
 
 def test_registry_rejects_unknown_and_duplicate():
