@@ -10,6 +10,13 @@ import numpy as np
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_multisplit.json"
 
+# The shared exact (interpolation-free, nearest-rank) percentile estimator:
+# one implementation for serving metrics and the SLO bench, so a reported
+# p99 is an OBSERVED sample, never an interpolated value that no request
+# actually experienced.  Defined in repro.serving.metrics (benchmarks depend
+# on repro, never the reverse) and re-exported here for benchmark code.
+from repro.serving.metrics import percentiles  # noqa: E402,F401
+
 
 def git_commit() -> str:
     """Short hash of the checked-out commit (with ``-dirty`` when the tree

@@ -16,11 +16,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     ap.add_argument("--section", action="append",
                     choices=["multisplit", "sort", "histogram", "sssp", "roofline",
-                             "roofline-multisplit", "autotune-drift"])
+                             "roofline-multisplit", "autotune-drift", "serving"])
     args = ap.parse_args()
     sections = args.section or ["multisplit", "sort", "histogram", "sssp",
                                 "roofline", "roofline-multisplit",
-                                "autotune-drift"]
+                                "autotune-drift", "serving"]
 
     print("name,us_per_call,derived")
     if "multisplit" in sections:
@@ -59,6 +59,10 @@ def main() -> None:
         from benchmarks import autotune_drift
 
         autotune_drift.main(quick=args.quick)
+    if "serving" in sections:
+        from benchmarks import bench_serving
+
+        bench_serving.main(quick=args.quick)
 
 
 if __name__ == "__main__":

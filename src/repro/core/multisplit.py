@@ -215,6 +215,27 @@ def batched_multisplit(
     return plan(keys, values)
 
 
+def _empty_segmented_result(
+    keys: Array, values: Optional[Array], m: int, mode: str
+) -> MultisplitResult:
+    """The s == 0 (zero-request step) result: (0, m) counts/starts and empty
+    data arrays, consistent with the s >= 1 shapes. A continuous-batching
+    step with no admitted requests hits this constantly (ISSUE 9 S1); it
+    used to be a ValueError from the plan layout validator."""
+    if keys.shape[0] != 0:
+        raise ValueError(
+            f"segment_starts is empty but keys has {keys.shape[0]} elements; "
+            f"0 segments can only own 0 keys"
+        )
+    zeros = jnp.zeros((0, m), jnp.int32)
+    perm = jnp.zeros((0,), jnp.int32)
+    if mode == "counts_only":
+        return MultisplitResult(None, None, zeros, zeros, None)
+    if mode == "positions_only":
+        return MultisplitResult(None, None, zeros, zeros, perm)
+    return MultisplitResult(keys, values, zeros, zeros, perm)
+
+
 def segmented_multisplit(
     keys: Array,
     bucket_fn: BucketSpec,
@@ -240,8 +261,16 @@ def segmented_multisplit(
     output, ``bucket_starts``/``bucket_counts`` are (s, m) segment-local,
     and ``permutation`` is segment-local. ``mode`` selects a partial
     pipeline as in :func:`multisplit`.
+
+    ``s == 0`` (no segments at all — a zero-request serving step) is legal
+    with empty ``keys`` and returns (0, m) counts/starts and empty data
+    arrays (the :mod:`repro.ops` facade short-circuits identically).
     """
     seg = jnp.asarray(segment_starts, jnp.int32)
+    if seg.shape[0] == 0:
+        return _empty_segmented_result(
+            keys, values, bucket_fn.num_buckets, mode
+        )
     plan = make_segmented_plan(
         keys.shape[0], int(seg.shape[0]), bucket_fn.num_buckets,
         method=method,

@@ -151,7 +151,8 @@ def _ranks_multisplit(
 
 
 def _segmented_ranks(
-    expert_ids: Array, seg: Array, num_experts: int, tile: int
+    expert_ids: Array, seg: Array, num_experts: int, tile: int,
+    backend: str = "vmap",
 ) -> Tuple[Array, Array, Array]:
     """One segmented ``positions_only`` ``repro.ops`` call -> (ranks, (s, e)
     counts, seg_ids); the derived per-token segment id is returned so
@@ -162,7 +163,7 @@ def _segmented_ranks(
     n = expert_ids.shape[0]
     res = ops.segmented_multisplit(
         expert_ids, ops.identity_buckets(num_experts), seg, method="dms",
-        tile=tile, mode="positions_only",
+        tile=tile, mode="positions_only", backend=backend,
     )
     seg_ids = segment_ids_from_starts(seg, n)
     ranks = res.permutation - res.bucket_starts[seg_ids, expert_ids]
@@ -174,6 +175,8 @@ def route_tokens_segmented(
     segment_starts: Array,
     num_experts: int,
     capacity: int,
+    *,
+    backend: str = "vmap",
 ) -> Tuple[Array, Array, Array]:
     """Per-request token routing: ONE segmented multisplit call assigns every
     virtual token a slot in its request's (expert, capacity) block.
@@ -185,13 +188,19 @@ def route_tokens_segmented(
     buffer; dropped tokens point one past the end), the per-token keep mask
     (rank < capacity, stable within each (request, expert) pair), and the
     (s, E) per-request expert load. This is the building block for
-    capacity-per-request batched serving (ROADMAP "heavy traffic").
+    capacity-per-request batched serving — :class:`repro.serving.ServerLoop`
+    calls it once per step (ROADMAP "heavy traffic"). ``s == 0`` (a
+    zero-request step) returns empty slots and (0, E) counts; zero-length
+    segments (a user with no tokens this step) get all-zero count rows.
+    ``backend`` selects the plan backend of the one segmented launch.
     """
     n = expert_ids.shape[0]
     seg = jnp.asarray(segment_starts, jnp.int32)
     s = int(seg.shape[0])
     tile = min(DISPATCH_TILE, max(int(n), 1))
-    ranks, counts, seg_ids = _segmented_ranks(expert_ids, seg, num_experts, tile)
+    ranks, counts, seg_ids = _segmented_ranks(
+        expert_ids, seg, num_experts, tile, backend=backend
+    )
     keep = ranks < capacity
     slot = jnp.where(
         keep,

@@ -62,6 +62,7 @@ from repro.core.pipeline import (
     make_segmented_plan,
     set_autotune,
 )
+from repro.core.multisplit import _empty_segmented_result
 from repro.core.sort import radix_sort, segmented_radix_sort
 
 Array = jnp.ndarray
@@ -208,6 +209,8 @@ def _check_flat(keys: Array, what: str) -> None:
         )
 
 
+
+
 def multisplit(
     keys: Array,
     spec: BucketSpec,
@@ -280,13 +283,17 @@ def segmented_multisplit(
     """Multisplit every ragged segment of flat ``keys`` independently in ONE
     plan launch (DESIGN.md §9): ``segment_starts`` is the (s,) ascending
     start-offset vector (``segment_starts[0] == 0``; empty segments
-    allowed).  Bitwise identical to per-segment :func:`multisplit` calls;
-    counts/starts come back (s, m) segment-local."""
+    allowed, and ``s == 0`` with empty keys — a zero-request serving step —
+    returns (0, m) counts).  Bitwise identical to per-segment
+    :func:`multisplit` calls; counts/starts come back (s, m)
+    segment-local."""
     spec = as_spec(spec)
     _check_flat(keys, "ops.segmented_multisplit")
     if values is not None and mode != "reorder":
         raise ValueError(f"mode={mode!r} never touches values")
     seg = jnp.asarray(segment_starts, jnp.int32)
+    if seg.shape[0] == 0:        # zero-request step (ISSUE 9 S1)
+        return _empty_segmented_result(keys, values, spec.num_buckets, mode)
     plan = make_segmented_plan(
         keys.shape[0], int(seg.shape[0]), spec.num_buckets, method=method,
         key_value=values is not None, backend=backend, tile=tile,

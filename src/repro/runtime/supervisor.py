@@ -53,16 +53,28 @@ class TrainLoopConfig:
 
 
 class FaultInjector:
-    """Deterministic fault injection for tests: raise at given steps."""
+    """Deterministic fault injection for tests: raise at given steps, or (for
+    sustained-load benchmarks) at a seeded Bernoulli ``rate`` per check —
+    reproducible across runs, independent of wall clock."""
 
-    def __init__(self, fail_at: Dict[int, int] = None):
+    def __init__(self, fail_at: Dict[int, int] = None, *,
+                 rate: float = 0.0, seed: int = 0):
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"rate must be in [0, 1), got {rate}")
         self.fail_at = dict(fail_at or {})   # step -> how many times to fail
+        self.rate = rate
+        self._rng = np.random.RandomState(seed)
+        self.injected = 0
 
     def check(self, step: int):
         n = self.fail_at.get(step, 0)
         if n > 0:
             self.fail_at[step] = n - 1
+            self.injected += 1
             raise RuntimeError(f"injected fault at step {step}")
+        if self.rate and self._rng.random_sample() < self.rate:
+            self.injected += 1
+            raise RuntimeError(f"injected fault (rate={self.rate}) at step {step}")
 
 
 class Supervisor:

@@ -1,0 +1,29 @@
+"""repro.serving — continuous-batching serving over the plan layer
+(DESIGN.md §16, ISSUE 9).
+
+The request-level consumer of the batched/segmented/autotuned multisplit
+machinery: a bounded :class:`RequestQueue`, a RangeSpec-length-bucketing
+:class:`AdmissionPolicy`, the :class:`ServerLoop` step engine (ONE segmented
+plan launch per step, warm shapes, fault retry/requeue, load shedding,
+graceful drain), :class:`ServingMetrics` (p50/p95/p99, sustained QPS,
+occupancy, conservation check), and the open-loop traffic simulator.
+"""
+
+from repro.serving.admission import AdmissionConfig, AdmissionPolicy
+from repro.serving.engine import ServerLoop, ServingConfig
+from repro.serving.metrics import ServingMetrics, StepRecord, percentiles
+from repro.serving.request import Request, RequestQueue
+from repro.serving.traffic import (
+    closed_loop,
+    open_loop,
+    poisson_arrivals,
+    synthetic_requests,
+)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionPolicy",
+    "ServerLoop", "ServingConfig",
+    "ServingMetrics", "StepRecord", "percentiles",
+    "Request", "RequestQueue",
+    "closed_loop", "open_loop", "poisson_arrivals", "synthetic_requests",
+]
