@@ -106,9 +106,28 @@ def run_serving_slo(
     slo_ms: float = 200.0,
     ci_floor: float | None = None,
     seed: int = 0,
+    fault_rate: float = 0.0,
+    verify: int | None = None,
 ) -> Dict[str, float]:
     """The full serving benchmark; returns the combined results dict and
-    raises SystemExit(1) when a gate (--ci-floor / conservation) fails."""
+    raises SystemExit(1) when a gate (--ci-floor / conservation /
+    chaos verify_mismatches) fails.  ``fault_rate > 0`` arms seeded
+    dispatch-level fault injection (the CI chaos-smoke mode, DESIGN.md
+    §17); ``verify`` arms runtime output verification for the run."""
+    from repro.runtime import FaultInjector, resilience as _rz
+
+    _rz.reset_stats()
+    if verify is not None:
+        _rz.set_verify(verify)
+    if fault_rate > 0.0:
+        _rz.set_fault_injector(
+            FaultInjector(dispatch_rate=fault_rate, seed=seed))
+
+    def _disarm() -> None:
+        _rz.set_fault_injector(None)
+        if verify is not None:
+            _rz.set_verify(None)
+
     cfg = _bench_config(quick)
     reqs = synthetic_requests(requests, cfg.num_experts, seed=seed)
 
@@ -126,6 +145,7 @@ def run_serving_slo(
         s = closed_loop(loop, reqs)
         if s["dropped_by_bug"] != 0:
             print(f"FAIL: closed loop dropped requests: {s}", file=sys.stderr)
+            _disarm()
             raise SystemExit(1)
         c_qps = requests / s["wall_s"]
         if c_qps / o_qps > ratio:
@@ -144,12 +164,15 @@ def run_serving_slo(
     s_open = open_loop(loop2, reqs, arrivals)
     if s_open["dropped_by_bug"] != 0:
         print(f"FAIL: open loop dropped requests: {s_open}", file=sys.stderr)
+        _disarm()
         raise SystemExit(1)
     slo_ok = s_open["latency_p99_ms"] <= slo_ms
     row("serving_open_p99", s_open["latency_p99_ms"] / 1e6,
         f"offered={offered:.0f} sustained={s_open['qps_sustained']:.0f} "
         f"slo={'PASS' if slo_ok else 'FAIL'}")
 
+    degradations = int(s_closed["degradations"] + s_open["degradations"])
+    mismatches = int(s_closed["verify_mismatches"] + s_open["verify_mismatches"])
     results = {
         "requests": requests,
         "oracle_qps": oracle_qps,
@@ -158,9 +181,13 @@ def run_serving_slo(
         "offered_qps": offered,
         "slo_ms": slo_ms,
         "slo_pass": bool(slo_ok),
+        "fault_rate": fault_rate,
+        "degradations": degradations,
+        "verify_mismatches": mismatches,
         "open": s_open,
         "closed": {k: s_closed[k] for k in
                    ("completed", "shed", "failed", "retries", "steps",
+                    "degradations", "verify_mismatches",
                     "batch_token_occupancy", "batch_requests_mean")},
     }
     # the machine-parsable line the CI step-summary table is built from
@@ -168,12 +195,25 @@ def run_serving_slo(
           f"p50_ms={s_open['latency_p50_ms']:.2f} "
           f"p99_ms={s_open['latency_p99_ms']:.2f} "
           f"shed={int(s_open['shed'])} failed={int(s_open['failed'])} "
+          f"degradations={degradations} verify_mismatches={mismatches} "
           f"oracle_ratio={ratio:.3f} slo={'PASS' if slo_ok else 'FAIL'}")
+    if fault_rate > 0.0:
+        # the chaos-smoke markdown step summary is built from these lines
+        for e in _rz.events():
+            fields = " ".join(f"{k}={v}" for k, v in e.items() if k != "kind")
+            print(f"DEGRADATION_EVENT kind={e['kind']} {fields}")
 
     append_trajectory(results, n=requests, key_value=False, backend=cfg.backend)
+    _disarm()
 
     if ci_floor is not None and ratio < ci_floor:
         print(f"FAIL: closed-loop/oracle ratio {ratio:.3f} < floor {ci_floor}",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if mismatches > 0:
+        # chaos gate: injected DISPATCH faults must degrade, never corrupt —
+        # any verified output mismatch is a real bug, not an injected one
+        print(f"FAIL: {mismatches} runtime-verification mismatches",
               file=sys.stderr)
         raise SystemExit(1)
     return results
@@ -189,10 +229,15 @@ def main(quick: bool = False, argv=None) -> None:
     ap.add_argument("--ci-floor", type=float, default=None,
                     help="minimum closed-loop/oracle throughput ratio")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="seeded dispatch-fault injection rate (chaos smoke)")
+    ap.add_argument("--verify", type=int, default=None, choices=(0, 1, 2),
+                    help="runtime verification level for this run")
     args = ap.parse_args(argv)
     n = args.requests or (QUICK_REQUESTS if args.quick else FULL_REQUESTS)
     run_serving_slo(n, quick=args.quick, qps=args.qps, slo_ms=args.slo_ms,
-                    ci_floor=args.ci_floor, seed=args.seed)
+                    ci_floor=args.ci_floor, seed=args.seed,
+                    fault_rate=args.fault_rate, verify=args.verify)
 
 
 if __name__ == "__main__":

@@ -163,4 +163,24 @@ print(f"serving: completed={served['completed']:.0f} in "
       f"dropped_by_bug={served['dropped_by_bug']:.0f}")
 assert served["dropped_by_bug"] == 0        # conservation: always
 
+# --- 12. resilience: degradation ladder + runtime verification (§17) --------
+# On real hardware a kernel can fail to lower, run out of VMEM, or answer
+# wrong. The dispatch layer classifies failures and degrades gracefully:
+# transient -> retry in place; resource -> halve the tile (pinning the
+# survivor); persistent -> demote pallas -> pallas-interpret -> vmap ->
+# reference, with a persistent circuit breaker quarantining plan classes
+# that keep failing. Opt-in runtime verification re-checks outputs against
+# the paper's invariants and recovers via the reference oracle on mismatch:
+#   REPRO_VERIFY=1   counts conservation + offset monotonicity (O(m))
+#   REPRO_VERIFY=2   + true-permutation / bucket-order proof (O(n log n))
+#   REPRO_STRICT=1   disable ALL fallback: fail loud with the original error
+ops.set_verify(2)                           # or REPRO_VERIFY=2 per process
+verified = ops.multisplit(keys, spec, backend="pallas")
+ops.set_verify(None)
+from repro.runtime import resilience
+
+counters = {k: v for k, v in resilience.stats().items() if v}
+print(f"resilience: verified launch OK, counters={counters or '{}'}")
+assert resilience.stats()["verify_mismatches"] == 0
+
 print("quickstart OK")

@@ -464,6 +464,38 @@ register_backend(Backend(
 BACKENDS = backend_names()
 
 
+def capability_summary() -> dict:
+    """Registry + resilience state in one introspection dict (the CI
+    registry step-summary unit, DESIGN.md §17): per-backend capability
+    flags plus the runtime-verification level, strict-mode state, demotion
+    order, quarantined plan-class count, and the degradation/verification
+    counters."""
+    from repro.runtime import resilience as _rz
+
+    backends = {}
+    for b in available_backends():
+        backends[b.name] = {
+            "description": b.description,
+            "caps": [k for k in ("tiled", "uses_kernels", "fuses_radix",
+                                 "fuses_digits", "compiled") if getattr(b, k)],
+            "families": list(b.families),
+            "digits": [1, 2] if b.fuses_digits else [1],
+            "tunable": list(b.tunable_axes),
+            "demotes_to": _rz.demote(b.name),
+        }
+    return {
+        "backends": backends,
+        "resilience": {
+            "verify": _rz.verify_level(),
+            "strict": _rz.strict(),
+            "demotion_order": list(_rz.DEMOTION_ORDER),
+            "breaker_threshold": _rz.BREAKER_THRESHOLD,
+            "quarantined": len(_rz.quarantine_snapshot()),
+            "counters": _rz.stats(),
+        },
+    }
+
+
 def resolve_backend(
     use_pallas: bool = False, interpret: bool = True, backend: Optional[str] = None
 ) -> str:

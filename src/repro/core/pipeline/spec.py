@@ -157,6 +157,26 @@ class PipelineSpec:
             raise ValueError("plan has no bucket spec")
         return self.bucket_fn
 
+    @property
+    def layout(self) -> str:
+        """flat | batched | segmented — the spec's input layout name."""
+        if self.segments is not None:
+            return "segmented"
+        return "batched" if self.batch is not None else "flat"
+
+    def plan_class(self) -> Tuple:
+        """The (spec, shape, layout, mode) identity the resilience layer's
+        circuit breaker and quarantine key on (DESIGN.md §17; the backend
+        slot is added by the ladder per rung).  Built from the bucket
+        spec's stable NAME, never an object id — quarantine entries are
+        per-host facts that must mean the same thing across processes."""
+        bf = self.bucket_fn
+        spec_name = "ids" if bf is None else getattr(
+            bf, "name", type(bf).__name__)
+        shape = (self.n,) if self.batch is None else (self.batch, self.n)
+        return (spec_name, shape, self.num_buckets, self.segments,
+                self.method, self.key_value, self.mode)
+
     def fused_radix(self) -> bool:
         """True when the digit is extracted inside the kernels (no host ids).
         Pre-PR-4 introspection surface; :meth:`label_fusion` is the general

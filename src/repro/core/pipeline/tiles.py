@@ -331,15 +331,31 @@ def resolve_sub_bits(
     return hit
 
 
+def pin_tile(n: int, m: int, method: str, key_value: bool, backend: str,
+             tile: int, *, digits: int = 1,
+             stage_m: Optional[int] = None) -> None:
+    """Pin one tile in the per-shape cache — the degradation ladder's door
+    (DESIGN.md §17): when halve-and-retry survives a
+    :class:`~repro.runtime.resilience.KernelResourceError`, the survivor is
+    pinned here so the shape class never re-learns the OOM the hard way.
+    (An EXPLICIT user tile stays uncached — :func:`resolve_tile`'s rule is
+    about one-off overrides; a measured resource limit is a shape fact.)"""
+    _TILE_CACHE[_tile_key(n, m, method, key_value, backend, digits, stage_m)] \
+        = int(tile)
+
+
 def clear_tile_cache(disk: bool = False) -> None:
     """Drop every memoized tile, family, sub-bits AND label-fusion decision.
 
-    Also drops the lazily-loaded snapshot of the persistent autotune cache,
-    so the next miss re-reads the file — i.e. a plain ``clear_tile_cache()``
-    simulates a fresh process against a warm cache file.  ``disk=True``
-    additionally deletes the on-disk layer itself."""
+    Also drops the lazily-loaded snapshots of the persistent autotune cache
+    and the resilience quarantine sidecar, so the next miss re-reads the
+    files — i.e. a plain ``clear_tile_cache()`` simulates a fresh process
+    against warm cache files (quarantined plan classes SURVIVE the reload,
+    DESIGN.md §17).  ``disk=True`` additionally deletes both on-disk
+    layers."""
     from repro.core.pipeline import autotune as _at
     from repro.core.pipeline import spec as _spec
+    from repro.runtime import resilience as _rz
 
     _TILE_CACHE.clear()
     _FAMILY_CACHE.clear()
@@ -347,8 +363,10 @@ def clear_tile_cache(disk: bool = False) -> None:
     _spec._FUSION_CACHE.clear()
     if disk:
         _at.clear_disk()
+        _rz.clear_quarantine(disk=True)
     else:
         _at.drop_loaded()
+        _rz.drop_loaded()
 
 
 def autotune_tile(

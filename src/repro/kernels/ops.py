@@ -33,6 +33,11 @@ def _tpu_available() -> bool:
         return False
 
 
+# Unrecognized REPRO_INTERPRET values already warned about (one warning per
+# distinct value per process — a typo'd env var must not spam every launch).
+_WARNED_INTERPRET: set = set()
+
+
 def resolve_interpret(compiled: bool) -> bool:
     """The per-backend ``interpret`` flag (DESIGN.md §15).
 
@@ -40,12 +45,26 @@ def resolve_interpret(compiled: bool) -> bool:
     escape hatch); ``REPRO_INTERPRET=0`` forces compiled lowering (CI for
     the Mosaic path on TPU runners). Unset, a ``compiled``-capable backend
     lowers compiled exactly when a TPU is attached — this container has
-    none, so the default stays bitwise-identical interpret execution."""
+    none, so the default stays bitwise-identical interpret execution.
+    Unrecognized values are treated as unset, with a one-time warning —
+    a typo'd ``REPRO_INTERPRET=ture`` silently compiling (or not) is
+    exactly the confusion the variable exists to remove."""
     env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
     if env in ("1", "true", "yes"):
         return True
     if env in ("0", "false", "no"):
         return False
+    if env and env not in _WARNED_INTERPRET:
+        _WARNED_INTERPRET.add(env)
+        import warnings
+
+        warnings.warn(
+            f"unrecognized REPRO_INTERPRET value {env!r}; accepted values are "
+            f"1/true/yes (force interpret), 0/false/no (force compiled), or "
+            f"unset (auto-detect: compiled when a TPU is attached) — "
+            f"treating as unset",
+            RuntimeWarning, stacklevel=2,
+        )
     return not (compiled and _tpu_available())
 
 

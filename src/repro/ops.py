@@ -64,6 +64,8 @@ from repro.core.pipeline import (
 )
 from repro.core.multisplit import _empty_segmented_result
 from repro.core.sort import radix_sort, segmented_radix_sort
+from repro.runtime import resilience as _rz
+from repro.runtime.resilience import set_strict, set_verify
 
 Array = jnp.ndarray
 
@@ -80,6 +82,8 @@ __all__ = [
     "histogram", "radix_sort", "segmented_radix_sort",
     # tuning
     "set_autotune",
+    # resilience (DESIGN.md §17)
+    "set_strict", "set_verify",
 ]
 
 
@@ -209,6 +213,52 @@ def _check_flat(keys: Array, what: str) -> None:
         )
 
 
+def _traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays if a is not None)
+
+
+def _resilient(
+    run, keys: Array, values: Optional[Array], spec: BucketSpec, *,
+    n: int, method: str, backend: str, tile: Optional[int], key_value: bool,
+    mode: str, segments: Optional[int] = None, segment_starts=None,
+):
+    """Route one eager facade call through the degradation ladder + runtime
+    verification (DESIGN.md §17): ``run(backend, tile)`` re-executes the op
+    on any rung.  Under a jax trace the ladder is bypassed — exceptions
+    cannot cross a trace, and the transform rules (vmap/jit/grad) must see
+    the plain op."""
+    if _traced(keys, values, segment_starts):
+        return run(backend, tile)
+    m_eff = spec.num_buckets * (segments or 1)
+    ctx = _rz.DispatchContext(
+        spec_name=getattr(spec, "name", type(spec).__name__),
+        shape=tuple(keys.shape), num_buckets=spec.num_buckets,
+        method=method, key_value=key_value, mode=mode,
+        layout="segmented" if segments is not None else "flat",
+    )
+
+    def resolved_tile(be: str) -> int:
+        from repro.core.pipeline.tiles import resolve_tile
+
+        return resolve_tile(n, m_eff, method, key_value, be)
+
+    def pin_tile(be: str, t: int) -> None:
+        from repro.core.pipeline.tiles import pin_tile as _pin
+
+        _pin(n, m_eff, method, key_value, be, t)
+
+    def verifier(res, be: str) -> None:
+        _rz.verify_result(
+            res, keys=keys, spec=spec, n=n, values=values,
+            segment_starts=segment_starts, mode=mode, backend=be, ctx=ctx,
+        )
+
+    return _rz.dispatch(
+        run, ctx, backend=backend, tile=tile, resolved_tile=resolved_tile,
+        pin_tile=pin_tile, verifier=verifier,
+    )
+
+
 
 
 def multisplit(
@@ -242,7 +292,12 @@ def multisplit(
             keys, values, spec, method=method, backend=backend, tile=tile,
             family=family,
         )
-    return _flat_op(spec, keys.shape[0], method, backend, tile, mode, family)(keys)
+    n = keys.shape[0]
+    return _resilient(
+        lambda be, tl: _flat_op(spec, n, method, be, tl, mode, family)(keys),
+        keys, None, spec, n=n, method=method, backend=backend, tile=tile,
+        key_value=False, mode=mode,
+    )
 
 
 def multisplit_key_value(
@@ -265,7 +320,12 @@ def multisplit_key_value(
     """
     spec = as_spec(spec)
     _check_flat(keys, "ops.multisplit_key_value")
-    return _kv_op(spec, keys.shape[0], method, backend, tile, family)(keys, values)
+    n = keys.shape[0]
+    return _resilient(
+        lambda be, tl: _kv_op(spec, n, method, be, tl, family)(keys, values),
+        keys, values, spec, n=n, method=method, backend=backend, tile=tile,
+        key_value=True, mode="reorder",
+    )
 
 
 def segmented_multisplit(
@@ -294,12 +354,21 @@ def segmented_multisplit(
     seg = jnp.asarray(segment_starts, jnp.int32)
     if seg.shape[0] == 0:        # zero-request step (ISSUE 9 S1)
         return _empty_segmented_result(keys, values, spec.num_buckets, mode)
-    plan = make_segmented_plan(
-        keys.shape[0], int(seg.shape[0]), spec.num_buckets, method=method,
-        key_value=values is not None, backend=backend, tile=tile,
-        bucket_fn=spec, mode=mode, family=family,
+    n, s = keys.shape[0], int(seg.shape[0])
+
+    def run(be, tl):
+        plan = make_segmented_plan(
+            n, s, spec.num_buckets, method=method,
+            key_value=values is not None, backend=be, tile=tl,
+            bucket_fn=spec, mode=mode, family=family,
+        )
+        return plan(keys, values, segment_starts=seg)
+
+    return _resilient(
+        run, keys, values, spec, n=n, method=method, backend=backend,
+        tile=tile, key_value=values is not None, mode=mode, segments=s,
+        segment_starts=seg,
     )
-    return plan(keys, values, segment_starts=seg)
 
 
 def histogram(

@@ -1,1 +1,17 @@
-from repro.runtime.supervisor import Supervisor, TrainLoopConfig  # noqa: F401
+from repro.runtime.supervisor import FaultInjector, Supervisor, TrainLoopConfig  # noqa: F401
+from repro.runtime.resilience import (  # noqa: F401
+    DEMOTION_ORDER,
+    DispatchContext,
+    KernelDispatchError,
+    KernelLoweringError,
+    KernelResourceError,
+    KernelResultError,
+    TransientDispatchError,
+    classify,
+    dispatch,
+    set_fault_injector,
+    set_strict,
+    set_verify,
+    verify_level,
+)
+from repro.runtime import resilience  # noqa: F401

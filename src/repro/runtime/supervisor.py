@@ -28,8 +28,9 @@ import dataclasses
 import logging
 import statistics
 import time
+import zlib
 from collections import deque
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -50,21 +51,72 @@ class TrainLoopConfig:
     straggler_window: int = 32
     straggler_factor: float = 2.0
     log_every: int = 10
+    # Seeded exponential backoff between step retries (DESIGN.md §17):
+    # sleep = min(cap, base * 2**attempt) * (0.5 + u), u ~ U[0, 1) seeded —
+    # back-to-back retries against a flapping device just burn the retry
+    # budget inside the same failure window.
+    retry_backoff_base: float = 0.05
+    retry_backoff_cap: float = 2.0
+    retry_backoff_seed: int = 0
+
+
+# Injected dispatch-fault flavors map onto the resilience taxonomy
+# (DESIGN.md §17) THROUGH the real classifier: the messages carry the same
+# markers real XLA/Mosaic failures do, so the chaos suite exercises
+# classification, not a test-only side door.
+_DISPATCH_FAULT_MESSAGES = {
+    "resource": ("injected dispatch fault: RESOURCE_EXHAUSTED: out of memory "
+                 "allocating VMEM scratch"),
+    "lowering": ("injected dispatch fault: Mosaic lowering failed: "
+                 "unsupported primitive in kernel body"),
+    "transient": ("injected dispatch fault: UNAVAILABLE: transient backend "
+                  "interruption"),
+}
 
 
 class FaultInjector:
     """Deterministic fault injection for tests: raise at given steps, or (for
     sustained-load benchmarks) at a seeded Bernoulli ``rate`` per check —
-    reproducible across runs, independent of wall clock."""
+    reproducible across runs, independent of wall clock.
+
+    ``dispatch_rate`` arms the second injection site — INSIDE kernel
+    dispatch (:func:`repro.runtime.resilience.check_faults`), seeded
+    per-backend so every backend sees an independent reproducible fault
+    stream.  Injected dispatch faults rotate through ``dispatch_kinds``
+    (resource / lowering / transient) with messages the resilience
+    classifier recognizes.  The ``reference`` rung is exempt unless
+    explicitly listed in ``dispatch_backends`` — the oracle is the ladder's
+    floor and must stay trustworthy for results to remain bitwise-correct
+    under chaos.
+    """
 
     def __init__(self, fail_at: Dict[int, int] = None, *,
-                 rate: float = 0.0, seed: int = 0):
+                 rate: float = 0.0, seed: int = 0,
+                 dispatch_rate: float = 0.0,
+                 dispatch_backends: Optional[Tuple[str, ...]] = None,
+                 dispatch_kinds: Tuple[str, ...] = ("resource", "lowering",
+                                                    "transient")):
         if not 0.0 <= rate < 1.0:
             raise ValueError(f"rate must be in [0, 1), got {rate}")
+        if not 0.0 <= dispatch_rate < 1.0:
+            raise ValueError(
+                f"dispatch_rate must be in [0, 1), got {dispatch_rate}")
+        unknown = set(dispatch_kinds) - set(_DISPATCH_FAULT_MESSAGES)
+        if unknown:
+            raise ValueError(
+                f"unknown dispatch fault kinds {sorted(unknown)}; expected a "
+                f"subset of {sorted(_DISPATCH_FAULT_MESSAGES)}")
         self.fail_at = dict(fail_at or {})   # step -> how many times to fail
         self.rate = rate
+        self.seed = seed
         self._rng = np.random.RandomState(seed)
         self.injected = 0
+        self.dispatch_rate = dispatch_rate
+        self.dispatch_backends = (None if dispatch_backends is None
+                                  else tuple(dispatch_backends))
+        self.dispatch_kinds = tuple(dispatch_kinds)
+        self._dispatch_rngs: Dict[str, np.random.RandomState] = {}
+        self.dispatch_injected = 0
 
     def check(self, step: int):
         n = self.fail_at.get(step, 0)
@@ -75,6 +127,32 @@ class FaultInjector:
         if self.rate and self._rng.random_sample() < self.rate:
             self.injected += 1
             raise RuntimeError(f"injected fault (rate={self.rate}) at step {step}")
+
+    def _backend_rng(self, backend: str) -> np.random.RandomState:
+        rng = self._dispatch_rngs.get(backend)
+        if rng is None:
+            # crc32, not hash(): stable across processes (PYTHONHASHSEED)
+            mix = (self.seed ^ zlib.crc32(backend.encode())) & 0x7FFFFFFF
+            rng = self._dispatch_rngs[backend] = np.random.RandomState(mix)
+        return rng
+
+    def check_dispatch(self, backend: str) -> None:
+        """The kernel-dispatch injection site (DESIGN.md §17): seeded
+        Bernoulli per (backend, attempt), raising a classifiable fault."""
+        if not self.dispatch_rate:
+            return
+        if self.dispatch_backends is not None:
+            if backend not in self.dispatch_backends:
+                return
+        elif backend == "reference":
+            return
+        rng = self._backend_rng(backend)
+        if rng.random_sample() < self.dispatch_rate:
+            kind = self.dispatch_kinds[rng.randint(len(self.dispatch_kinds))]
+            self.dispatch_injected += 1
+            self.injected += 1
+            raise RuntimeError(
+                f"{_DISPATCH_FAULT_MESSAGES[kind]} [backend={backend}]")
 
 
 class Supervisor:
@@ -87,6 +165,7 @@ class Supervisor:
         loop_cfg: TrainLoopConfig,
         fault_injector: Optional[FaultInjector] = None,
         remesh_fn: Optional[Callable[[Any], Any]] = None,
+        sleep_fn: Callable[[float], None] = time.sleep,
     ):
         self.train_step = train_step
         self.batch_fn = batch_fn
@@ -94,9 +173,18 @@ class Supervisor:
         self.ckpt = CheckpointManager(loop_cfg.checkpoint_dir, async_saves=True)
         self.faults = fault_injector
         self.remesh_fn = remesh_fn
+        self.sleep_fn = sleep_fn          # injectable: tests pass a recorder
+        self._backoff_rng = np.random.RandomState(loop_cfg.retry_backoff_seed)
         self.step_times: deque = deque(maxlen=loop_cfg.straggler_window)
         self.stats = {"retries": 0, "restores": 0, "stragglers": 0, "remeshes": 0}
         self.history = []
+
+    def _backoff(self, attempt: int) -> float:
+        """Seeded, capped exponential backoff with jitter: deterministic
+        given ``retry_backoff_seed``, never above ``retry_backoff_cap``."""
+        cfg = self.cfg
+        base = min(cfg.retry_backoff_cap, cfg.retry_backoff_base * (2 ** attempt))
+        return base * (0.5 + self._backoff_rng.random_sample())
 
     def run(self, state) -> Any:
         cfg = self.cfg
@@ -122,8 +210,22 @@ class Supervisor:
                     ok = True
                     break
                 except Exception as e:  # noqa: BLE001 — supervisor boundary
+                    from repro.runtime import resilience
+
                     self.stats["retries"] += 1
                     log.warning("step %d attempt %d failed: %s", step, attempt, e)
+                    kerr = resilience.classify(e)
+                    if isinstance(kerr, (resilience.KernelLoweringError,
+                                         resilience.KernelResourceError)):
+                        # persistent lowering/resource failure: the same
+                        # program cannot succeed on retry — go straight to
+                        # restore instead of burning the retry budget
+                        log.warning(
+                            "step %d: persistent %s; skipping remaining retries",
+                            step, type(kerr).__name__)
+                        break
+                    if attempt < cfg.max_retries_per_step:
+                        self.sleep_fn(self._backoff(attempt))
             if not ok:
                 restores += 1
                 self.stats["restores"] += 1

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.runtime import resilience as _rz
 from repro.serving.admission import AdmissionConfig, AdmissionPolicy
 from repro.serving.metrics import ServingMetrics, StepRecord
 from repro.serving.request import Request, RequestQueue
@@ -103,6 +104,8 @@ class ServingConfig:
     max_requeues: int = 1            # failed-step requeues before a request fails
     max_queue_depth: int = 4096
     lookahead_batches: int = 4       # admission window, in max-size batches
+    verify_sample_rate: float = 1.0  # launch-sampling rate once REPRO_VERIFY
+    verify_seed: int = 0             # is armed (DESIGN.md §17)
 
     def __post_init__(self) -> None:
         if not self.token_pad_classes:
@@ -126,6 +129,11 @@ class ServingConfig:
             raise ValueError(
                 f"length_splitters must be strictly ascending, got "
                 f"{self.length_splitters}"
+            )
+        if not 0.0 <= self.verify_sample_rate <= 1.0:
+            raise ValueError(
+                f"verify_sample_rate must be in [0, 1], got "
+                f"{self.verify_sample_rate}"
             )
 
     def admission(self) -> AdmissionConfig:
@@ -165,11 +173,13 @@ class ServerLoop:
         self.policy = AdmissionPolicy(cfg.admission())
         self.metrics = ServingMetrics()
         self.faults = fault_injector
+        self._default_step = step_fn is None
         if step_fn is None:
             self._step_fn, self._jit_step = _routing_op(
                 cfg.num_experts, cfg.capacity, cfg.backend)
         else:
             self._step_fn, self._jit_step = step_fn, jax.jit(step_fn)
+        self._verify_rng = np.random.RandomState(cfg.verify_seed)
         self._step_idx = 0
         self._next_rid = 0
         self._inflight: Optional[_Inflight] = None
@@ -264,7 +274,77 @@ class ServerLoop:
         """Fault-injection check + asynchronous device dispatch."""
         if self.faults is not None:
             self.faults.check(idx)
+        _rz.check_faults(self.cfg.backend)   # dispatch-level injection (§17)
         return self._jit_step(ids, starts)
+
+    def _reference_rerun(self, p: "_Inflight"):
+        """Re-run one step EAGERLY on the reference backend (the last rung
+        of the §17 ladder at the serving boundary)."""
+        ref_run, _ = _routing_op(
+            self.cfg.num_experts, self.cfg.capacity, "reference")
+        out = ref_run(p.ids, p.starts)
+        jax.block_until_ready(out)
+        self.metrics.degradations += 1
+        _rz._count("degradations")
+        return out
+
+    def _degrade(self, p: "_Inflight", err: Exception):
+        """Persistent kernel failures (lowering / resource) never heal by
+        requeueing — the step re-runs on the reference backend instead so
+        its requests still complete (degraded, counted). Transient faults
+        and non-kernel errors keep the requeue path; a custom ``step_fn``
+        has no reference twin; ``REPRO_STRICT`` disables all fallback."""
+        if not self._default_step or _rz.strict():
+            return None
+        kerr = _rz.classify(err, backend=self.cfg.backend)
+        if not isinstance(kerr, (_rz.KernelLoweringError,
+                                 _rz.KernelResourceError)):
+            return None
+        try:
+            out = self._reference_rerun(p)
+        except Exception as ref_e:  # noqa: BLE001 — fall back to requeue
+            log.warning("step %d reference fallback failed: %s", p.idx, ref_e)
+            return None
+        _rz._count("backend_demotions")
+        _rz._event("serving_degrade", step=p.idx, frm=self.cfg.backend,
+                   to="reference", error=type(kerr).__name__)
+        log.warning("step %d degraded to reference after %s: %s",
+                    p.idx, type(kerr).__name__, err)
+        return out
+
+    def _verify_ctx(self, p: "_Inflight") -> _rz.DispatchContext:
+        return _rz.DispatchContext(
+            spec_name="route_tokens_segmented", shape=(int(p.ids.shape[0]),),
+            num_buckets=self.cfg.num_experts, mode="positions",
+            layout="segmented", seed=self.cfg.verify_seed,
+        )
+
+    def _maybe_verify(self, p: "_Inflight", out):
+        """Sampled runtime verification of one routing launch (§17): on a
+        mismatch, count it, emit the structured repro report, and return
+        the reference re-run so the degraded result is still correct."""
+        if (not self._default_step or _rz.verify_level() <= 0
+                or self.cfg.backend == "reference"
+                or self._verify_rng.random_sample()
+                >= self.cfg.verify_sample_rate):
+            return out
+        _rz._count("verify_checks")
+        try:
+            _rz.verify_routing(out, p.ids, p.starts, self.cfg.num_experts,
+                               self.cfg.capacity, backend=self.cfg.backend)
+            return out
+        except _rz.KernelResultError as ve:
+            if _rz.strict():
+                raise
+            self.metrics.verify_mismatches += 1
+            _rz._count("verify_mismatches")
+            _rz._count("reference_reruns")
+            _rz._event("serving_verify_mismatch", step=p.idx,
+                       backend=self.cfg.backend, detail=str(ve))
+            _rz._emit_report(self._verify_ctx(p), self.cfg.backend, str(ve))
+            log.warning("step %d verify mismatch, re-running on reference: %s",
+                        p.idx, ve)
+            return self._reference_rerun(p)
 
     def flush(self) -> None:
         """Finalize the in-flight step: block for its completion, retry its
@@ -292,6 +372,10 @@ class ServerLoop:
                 log.warning("step %d attempt %d failed: %s", p.idx, attempts, e)
 
         if err is not None:
+            out = self._degrade(p, err)      # §17: reference rung, not requeue
+            if out is not None:
+                err = None
+        if err is not None:
             # bounded requeue: the batch goes back to the queue HEAD in
             # order; requests over their requeue budget fail (counted).
             kept, dead = [], []
@@ -309,6 +393,7 @@ class ServerLoop:
             self.metrics.observe_step(rec)
             return
 
+        out = self._maybe_verify(p, out)     # §17: sampled output checking
         done = self.clock()
         for r in p.batch:
             self.metrics.observe_completion(r.arrival, done)

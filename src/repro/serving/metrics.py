@@ -77,6 +77,8 @@ class ServingMetrics:
         self.failed = 0             # requeue budget exhausted (dropped ON PURPOSE)
         self.retries = 0            # in-step launch retries
         self.requeued = 0           # requests put back after a failed step
+        self.degradations = 0       # steps re-run on the reference backend (§17)
+        self.verify_mismatches = 0  # sampled runtime-verification failures (§17)
         self.steps = 0
         self.empty_steps = 0        # step() polled with nothing admissible
         self.queue_depth_max = 0
@@ -142,6 +144,8 @@ class ServingMetrics:
             "failed": self.failed,
             "retries": self.retries,
             "requeued": self.requeued,
+            "degradations": self.degradations,
+            "verify_mismatches": self.verify_mismatches,
             "steps": self.steps,
             "empty_steps": self.empty_steps,
             "queue_depth_max": self.queue_depth_max,

@@ -18,6 +18,7 @@ EXPECTED_ALL = (
     "multisplit", "multisplit_key_value", "segmented_multisplit",
     "histogram", "radix_sort", "segmented_radix_sort",
     "set_autotune",
+    "set_strict", "set_verify",
 )
 
 EXPECTED_SIGNATURES = {
@@ -59,6 +60,9 @@ EXPECTED_SIGNATURES = {
         "(enabled=None, *, cache_dir=None, persist=None, trials=None, "
         "candidates=None)"
     ),
+    # ISSUE 10 additively appended the resilience opt-ins (DESIGN.md §17).
+    "set_strict": "(enabled)",
+    "set_verify": "(level)",
 }
 
 

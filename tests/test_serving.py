@@ -429,3 +429,112 @@ def test_route_tokens_segmented_zero_length_segments(backend):
         for ex in range(E):
             assert counts_np[i, ex] == int((np.asarray(ids[a:b]) == ex).sum())
     assert bool(np.asarray(keep)[: 0].all())  # vacuous on empties, no crash
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 (S6): degradation + runtime-verification counters in serving
+# ---------------------------------------------------------------------------
+
+class AlwaysKernelFault:
+    """Raises with a RESOURCE marker the resilience classifier recognizes —
+    unlike AlwaysFail's generic 'boom', this is a persistent KERNEL failure
+    and must degrade to the reference rung instead of requeueing."""
+
+    def check(self, step):
+        raise RuntimeError("RESOURCE_EXHAUSTED: out of memory in VMEM scratch")
+
+
+@pytest.fixture
+def rz_clean():
+    from repro.runtime import resilience as rz
+
+    rz.reset_stats()
+    rz.set_verify(None)
+    rz.set_strict(None)
+    rz.set_fault_injector(None)
+    yield rz
+    rz.reset_stats()
+    rz.set_verify(None)
+    rz.set_strict(None)
+    rz.set_fault_injector(None)
+
+
+def test_metrics_summary_has_resilience_counters(rz_clean):
+    loop = ServerLoop(_cfg())
+    for r in _reqs([2, 3]):
+        loop.submit(r)
+    s = loop.drain()
+    assert s["degradations"] == 0 and s["verify_mismatches"] == 0
+    assert s["completed"] == 2 and s["dropped_by_bug"] == 0
+
+
+def test_persistent_kernel_fault_degrades_to_reference(rz_clean):
+    """Every launch hits a persistent resource fault: without the §17
+    ladder all requests would exhaust their requeue budget and FAIL; with
+    it, each step re-runs on the reference backend and completes."""
+    loop = ServerLoop(
+        _cfg(max_step_attempts=1, max_requeues=0),
+        fault_injector=AlwaysKernelFault(),
+    )
+    for r in _reqs([2, 3, 4, 5]):
+        loop.submit(r)
+    s = loop.drain()
+    assert s["completed"] == 4 and s["failed"] == 0
+    assert s["degradations"] >= 1 and s["dropped_by_bug"] == 0
+    assert rz_clean.stats()["degradations"] >= 1
+
+
+def test_degrade_respects_strict_mode(rz_clean):
+    """REPRO_STRICT disables the serving fallback too: the pre-§17
+    requeue-then-fail accounting returns."""
+    rz_clean.set_strict(True)
+    loop = ServerLoop(
+        _cfg(max_step_attempts=1, max_requeues=0),
+        fault_injector=AlwaysKernelFault(),
+    )
+    for r in _reqs([2, 3]):
+        loop.submit(r)
+    s = loop.drain()
+    assert s["completed"] == 0 and s["failed"] == 2
+    assert s["degradations"] == 0 and s["dropped_by_bug"] == 0
+
+
+def test_verify_mismatch_counted_and_healed_by_reference(rz_clean):
+    """A lying step function (tampered routing counts) is caught by the
+    sampled REPRO_VERIFY check; the step re-runs on reference and the
+    mismatch is counted in the summary + the structured repro report."""
+    rz_clean.set_verify(2)
+    loop = ServerLoop(_cfg(verify_sample_rate=1.0))
+    real = loop._jit_step
+
+    def lying(ids, starts):
+        slot, keep, counts = real(ids, starts)
+        bad = np.asarray(counts).copy()
+        bad[0, 0] += 1                       # breaks token conservation
+        return slot, keep, jnp.asarray(bad)
+
+    loop._jit_step = lying
+    for r in _reqs([2, 3, 4]):
+        loop.submit(r)
+    s = loop.drain()
+    assert s["completed"] == 3 and s["failed"] == 0
+    assert s["verify_mismatches"] >= 1 and s["degradations"] >= 1
+    assert s["dropped_by_bug"] == 0
+    report = rz_clean.last_report()
+    assert report is not None and report["spec"] == "route_tokens_segmented"
+    assert rz_clean.stats()["verify_mismatches"] == s["verify_mismatches"]
+
+
+def test_verify_sample_rate_zero_never_checks(rz_clean):
+    rz_clean.set_verify(2)
+    loop = ServerLoop(_cfg(verify_sample_rate=0.0))
+    for r in _reqs([2, 3]):
+        loop.submit(r)
+    s = loop.drain()
+    assert s["completed"] == 2 and s["verify_mismatches"] == 0
+    assert rz_clean.stats()["verify_checks"] == 0
+
+
+def test_verify_sample_rate_validation():
+    with pytest.raises(ValueError, match="verify_sample_rate"):
+        _cfg(verify_sample_rate=1.5)
